@@ -1,0 +1,59 @@
+"""Binary-GEMM kernel microbenchmarks (CPU timings of the XLA paths; the
+Pallas kernels run in interpret mode — their TPU performance is covered by
+the roofline analysis, these timings validate correctness-path overheads
+and the packed representation's 32x byte reduction)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows() -> list[tuple[str, float, str]]:
+    m, n, k = 256, 256, 4096
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (n, k), jnp.float32)
+
+    out = []
+    f_ref = jax.jit(lambda a, b: ref.bnn_matmul_ref(a, b))
+    us_ref = _time(f_ref, x, w)
+    out.append(("kernel_ref_pm1_matmul", us_ref, f"M=N=256 K=4096 f32"))
+
+    f_packed = jax.jit(
+        lambda a, b: ops.binary_matmul(a, b, implementation="packed_ref")
+    )
+    us_packed = _time(f_packed, x, w)
+    wp, _ = ops.pack_weights(w)
+    ratio = (w.size * 4) / (wp.size * 4)
+    out.append(
+        (
+            "kernel_packed_ref_matmul",
+            us_packed,
+            f"weight_bytes_ratio={ratio:.1f}x speed_vs_ref={us_ref/us_packed:.2f}x",
+        )
+    )
+
+    f_bitpack = jax.jit(lambda a: ops.bitpack(a, interpret=True))
+    us_bp = _time(f_bitpack, x)
+    out.append(("kernel_bitpack_interpret", us_bp, f"(256,4096)->(256,128)u32"))
+
+    # small-shape pallas interpret sanity timing (correctness covered in tests)
+    xs, ws = x[:64, :512], w[:64, :512]
+    f_pp = jax.jit(
+        lambda a, b: ops.binary_matmul(a, b, implementation="pallas_packed")
+    )
+    us_pp = _time(f_pp, xs, ws, iters=1)
+    out.append(("kernel_pallas_packed_interpret", us_pp, "64x64x512 (interpret mode)"))
+    return out

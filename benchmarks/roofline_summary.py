@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Emits one row per compiled (arch x shape x mesh) cell with the three
+roofline terms, the dominant bottleneck, and the roofline fraction — the
+source table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def rows(out_dir: str = "experiments/dryrun") -> list[tuple[str, float, str]]:
+    out = []
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        return [("roofline_summary", 0.0, "no dry-run artifacts yet — run "
+                 "`python -m repro.launch.dryrun`")]
+    n_ok = n_skip = n_err = 0
+    for f in files:
+        try:
+            r = json.load(open(f))
+        except json.JSONDecodeError:
+            continue
+        if r["status"] == "skipped":
+            n_skip += 1
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            out.append((f"roofline_{r['cell']}", 0.0, f"ERROR {r.get('error','')[:80]}"))
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        out.append(
+            (
+                f"roofline_{r['cell']}",
+                rl["step_time_s"] * 1e6,
+                f"bottleneck={rl['bottleneck']} compute={rl['compute_s']:.4g}s "
+                f"memory={rl['memory_s']:.4g}s collective={rl['collective_s']:.4g}s "
+                f"useful_flops={rl['useful_flops_fraction']:.3f} "
+                f"roofline_frac={rl['roofline_fraction']:.4f} "
+                f"fits={r['memory']['argument_bytes_per_dev'] < 12 * 2**30}",
+            )
+        )
+    out.append(("roofline_totals", 0.0, f"ok={n_ok} skipped={n_skip} errors={n_err}"))
+    return out

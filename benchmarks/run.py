@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * table1_elements   — paper Table 1 (parallel neurons + element counts)
+  * throughput_model  — §2 Evaluation rates incl. the 960M-networks headline
+  * popcnt_ablation   — §3 native-POPCNT ablation (12-25 -> 5-10 elements)
+  * kernel_bench      — binary-GEMM kernel paths
+  * roofline_summary  — dry-run roofline table (EXPERIMENTS.md §Roofline)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        kernel_bench,
+        popcnt_ablation,
+        roofline_summary,
+        table1_elements,
+        throughput_model,
+    )
+
+    print("name,us_per_call,derived")
+    modules = [
+        table1_elements,
+        throughput_model,
+        popcnt_ablation,
+        kernel_bench,
+        roofline_summary,
+    ]
+    failures = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{mod.__name__},nan,ERROR {type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

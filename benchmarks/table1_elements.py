@@ -1,0 +1,39 @@
+"""Paper Table 1: max parallel neurons and required elements per activation
+width — reproduced from BOTH the analytic cost model and actually-compiled
+programs.  Also times the compiler itself (us_per_call column)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import bnn, compile_bnn
+from repro.core.pipeline import RMT, elements_for_neuron_group, max_parallel_neurons
+
+WIDTHS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+PAPER_PARALLEL = (128, 64, 32, 16, 8, 4, 2, 1)
+PAPER_ELEMENTS = (12, 14, 16, 18, 20, 22, 24, 25)
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    for n, p_paper, e_paper in zip(WIDTHS, PAPER_PARALLEL, PAPER_ELEMENTS):
+        par = max_parallel_neurons(n)
+        el = elements_for_neuron_group(n, par)
+        # compile a 1-group layer at the Table-1 operating point
+        params = bnn.init_params(bnn.BnnSpec((n, par)), jax.random.PRNGKey(0))
+        t0 = time.perf_counter()
+        prog = compile_bnn([np.asarray(w) for w in params])
+        dt_us = (time.perf_counter() - t0) * 1e6
+        match = (par == p_paper) and (el == e_paper) and (prog.num_elements == e_paper)
+        out.append(
+            (
+                f"table1_N{n}",
+                dt_us,
+                f"parallel={par}/{p_paper} elements={el}/{e_paper} "
+                f"compiled={prog.num_elements} peak_phv={prog.peak_phv_bits} "
+                f"match={match}",
+            )
+        )
+    return out

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    MlaConfig,
+    ModelConfig,
+    MoeConfig,
+    QuantConfig,
+    SsmConfig,
+    get_config,
+    list_archs,
+    register,
+)
+
+__all__ = [
+    "MlaConfig",
+    "ModelConfig",
+    "MoeConfig",
+    "QuantConfig",
+    "SsmConfig",
+    "get_config",
+    "list_archs",
+    "register",
+]

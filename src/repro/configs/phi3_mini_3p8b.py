@@ -1,0 +1,19 @@
+"""phi3-mini-3.8b [dense]: 32L d_model=3072 32H (kv=32) d_ff=8192
+vocab=32064 — RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+Full attention -> ``long_500k`` skipped.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("phi3-mini-3.8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-mini-3.8b",
+        family="dense",
+        num_layers=32,
+        d_model=3072,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+    )

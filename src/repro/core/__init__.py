@@ -1,0 +1,35 @@
+"""N2Net core: the paper's contribution.
+
+``bitops``     — chip-legal bit primitives (HAKMEM popcount, packing).
+``bnn``        — binary NN definition + mathematical oracle + STE.
+``phv``        — 512B Packet Header Vector model and field allocator.
+``pipeline``   — RMT instruction set, elements, chip spec, cost model.
+``compiler``   — BNN weights -> pipeline program (the paper's 5 steps).
+``interpreter``— JAX executor with exact RMT element semantics.
+``p4gen``      — P4 source emission.
+``throughput`` — analytic packets/s -> neurons/s model.
+"""
+from repro.core import bitops, bnn, compiler, interpreter, p4gen, phv, pipeline, throughput
+from repro.core.bnn import BnnSpec, forward, init_params
+from repro.core.compiler import compile_bnn
+from repro.core.interpreter import run_program
+from repro.core.pipeline import RMT, RMT_NATIVE_POPCNT, ChipSpec
+
+__all__ = [
+    "BnnSpec",
+    "ChipSpec",
+    "RMT",
+    "RMT_NATIVE_POPCNT",
+    "bitops",
+    "bnn",
+    "compile_bnn",
+    "compiler",
+    "forward",
+    "init_params",
+    "interpreter",
+    "p4gen",
+    "phv",
+    "pipeline",
+    "run_program",
+    "throughput",
+]

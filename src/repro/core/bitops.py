@@ -1,0 +1,129 @@
+"""Bit-level primitives used by N2Net.
+
+Everything here restricts itself to operations a switching-chip ALU (or the
+TPU VPU) supports natively: bitwise logic, shifts, and integer adds.  The
+HAKMEM-style tree popcount (`hakmem_popcount`) is the *paper's* POPCNT
+synthesis (it is what `core.compiler` schedules onto pipeline elements); the
+packing helpers are shared with the Pallas kernels.
+
+Bit order convention: bit ``j`` of word ``w`` holds element ``32*i + j`` of
+the unpacked vector (little-endian within a word).  ``pack_bits`` /
+``unpack_bits`` are exact inverses under this convention.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32  # packing word width (uint32)
+
+# HAKMEM / Hacker's-Delight tree-popcount masks, per level.
+_POPCOUNT_MASKS = (
+    np.uint32(0x55555555),
+    np.uint32(0x33333333),
+    np.uint32(0x0F0F0F0F),
+    np.uint32(0x00FF00FF),
+    np.uint32(0x0000FFFF),
+)
+
+
+def hakmem_popcount(x: jax.Array) -> jax.Array:
+    """Tree popcount over uint32 using only shift / AND / add.
+
+    This mirrors the algorithm N2Net schedules onto RMT elements: level ``l``
+    ANDs the two shifted copies with the level mask and adds partial counts
+    (the paper spends two pipeline elements per level: one for the parallel
+    shift/AND pair on the duplicated PHV fields, one for the SUM).
+    """
+    if x.dtype != jnp.uint32:
+        raise TypeError(f"hakmem_popcount expects uint32, got {x.dtype}")
+    for level, mask in enumerate(_POPCOUNT_MASKS):
+        shift = 1 << level
+        # Two "copies" (the paper's duplication step): x and x >> shift.
+        x = (x & mask) + ((x >> shift) & mask)
+    return x
+
+
+def pack_bits(bits: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a {0,1} (or boolean) array into uint32 words along ``axis``.
+
+    The axis length must be a multiple of 32 (callers pad with
+    ``pad_to_word_multiple`` first).  Little-endian bit order within a word.
+    """
+    bits = jnp.asarray(bits)
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    if n % WORD != 0:
+        raise ValueError(f"pack axis length {n} not a multiple of {WORD}")
+    bits = jnp.moveaxis(bits, axis, -1)
+    new_shape = bits.shape[:-1] + (n // WORD, WORD)
+    grouped = bits.reshape(new_shape).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    packed = jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(words: jax.Array, axis: int = -1, count: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_bits`; optionally trim to ``count`` bits."""
+    words = jnp.asarray(words)
+    if words.dtype != jnp.uint32:
+        raise TypeError(f"unpack_bits expects uint32, got {words.dtype}")
+    axis = axis % words.ndim
+    words = jnp.moveaxis(words, axis, -1)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * WORD,))
+    if count is not None:
+        bits = bits[..., :count]
+    return jnp.moveaxis(bits, -1, axis).astype(jnp.int32)
+
+
+def pad_to_word_multiple(bits: jax.Array, axis: int = -1, value: int = 0) -> jax.Array:
+    """Pad the bit axis up to the next multiple of 32 with ``value``."""
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    rem = (-n) % WORD
+    if rem == 0:
+        return bits
+    pad = [(0, 0)] * bits.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(bits, pad, constant_values=value)
+
+
+def sign_to_bits(x: jax.Array) -> jax.Array:
+    """Map a ±1 (or real) array to {0,1} bits: bit = 1 iff x >= 0.
+
+    N2Net's SIGN convention: the sign activation emits +1 for ``popcount >=
+    N/2`` — i.e. non-negative pre-activations binarize to bit 1.
+    """
+    return (x >= 0).astype(jnp.int32)
+
+
+def bits_to_sign(b: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Map {0,1} bits to ±1 values (0 -> -1, 1 -> +1)."""
+    return (2 * b.astype(jnp.int32) - 1).astype(dtype)
+
+
+def xnor(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Bitwise XNOR on packed words (agreement mask of two sign vectors)."""
+    return ~(a ^ b)
+
+
+def packed_dot(x_words: jax.Array, w_words: jax.Array, n_bits: int) -> jax.Array:
+    """±1 dot product of two packed sign vectors via XNOR + popcount.
+
+    ``x_words``/``w_words``: uint32 arrays whose last axis packs ``n_bits``
+    sign bits (padded region must be *equal in both operands* so XNOR of the
+    pad contributes popcount 1 per pad bit; we subtract the pad contribution).
+
+    Returns ``sum(x_i * w_i)`` over the n_bits genuine positions, i.e.
+    ``2 * popcount(XNOR) - n_bits`` with pad correction, as int32.
+    """
+    agree = hakmem_popcount(xnor(x_words, w_words))
+    total = jnp.sum(agree.astype(jnp.int32), axis=-1)
+    n_padded = x_words.shape[-1] * WORD
+    pad = n_padded - n_bits
+    # Pad bits are 0 in both operands -> XNOR gives 1 -> counted as agreement.
+    return 2 * (total - pad) - n_bits

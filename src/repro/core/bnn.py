@@ -1,0 +1,139 @@
+"""Binary neural network definition + mathematical oracle.
+
+This is the *model-level* ground truth that both the switch-pipeline
+interpreter (``core.interpreter``) and the Pallas kernels (``kernels/``) are
+validated against.
+
+Conventions (matching the paper):
+  * activations and weights are signs in {-1,+1}, stored as {0,1} bits
+    (bit 1 == +1);
+  * a neuron computes ``y = SIGN(popcount(XNOR(x, w)) >= N/2)`` which is
+    exactly ``sign(sum_i x_i * w_i)`` with the tie (sum == 0) resolving to +1;
+  * layers are fully connected (the only kind N2Net compiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+
+
+@dataclasses.dataclass(frozen=True)
+class BnnSpec:
+    """A fully-connected BNN: ``layer_sizes[0]`` inputs, then one entry per
+    layer's neuron count.  E.g. the paper's headline model is
+    ``BnnSpec((32, 64, 32))`` — 32b activations, layers of 64 and 32 neurons.
+    """
+
+    layer_sizes: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.layer_sizes) < 2:
+            raise ValueError("need at least (input_size, one layer)")
+        for s in self.layer_sizes:
+            if s <= 0:
+                raise ValueError(f"layer size must be positive, got {s}")
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_sizes) - 1
+
+    @property
+    def input_bits(self) -> int:
+        return self.layer_sizes[0]
+
+    @property
+    def output_bits(self) -> int:
+        return self.layer_sizes[-1]
+
+
+def init_params(spec: BnnSpec, key: jax.Array) -> list[jax.Array]:
+    """Random ±1 weights as {0,1} int32 bit matrices, one (out, in) per layer."""
+    params = []
+    for i in range(spec.num_layers):
+        key, sub = jax.random.split(key)
+        fan_in, fan_out = spec.layer_sizes[i], spec.layer_sizes[i + 1]
+        params.append(jax.random.bernoulli(sub, 0.5, (fan_out, fan_in)).astype(jnp.int32))
+    return params
+
+
+def neuron_preact(x_bits: jax.Array, w_bits: jax.Array) -> jax.Array:
+    """popcount(XNOR(x, w)) per neuron — the paper's pre-activation.
+
+    x_bits: (..., n_in) in {0,1};  w_bits: (n_out, n_in) in {0,1}.
+    Returns (..., n_out) int32 agreement counts.
+    """
+    agree = 1 - jnp.bitwise_xor(x_bits[..., None, :], w_bits)  # XNOR
+    return jnp.sum(agree, axis=-1)
+
+
+def layer_forward(x_bits: jax.Array, w_bits: jax.Array) -> jax.Array:
+    """One BNN layer: SIGN(popcount(XNOR) >= n_in/2), as {0,1} bits.
+
+    Matches the paper's SIGN step: output bit is 1 iff the agreement count is
+    >= half the activation-vector length.  Equivalent to
+    ``sign(sum x_i*w_i) >= 0`` in ±1 arithmetic (2*pop - n >= 0).
+    """
+    n_in = x_bits.shape[-1]
+    pre = neuron_preact(x_bits, w_bits)
+    return (2 * pre >= n_in).astype(jnp.int32)
+
+
+def forward(params: Sequence[jax.Array], x_bits: jax.Array) -> jax.Array:
+    """Full BNN forward pass on {0,1} bit activations."""
+    h = x_bits
+    for w in params:
+        h = layer_forward(h, w)
+    return h
+
+
+def forward_pm1(params: Sequence[jax.Array], x_pm1: jax.Array) -> jax.Array:
+    """Same network evaluated in ±1 arithmetic (float path, used to prove the
+    XNOR-popcount identity: both paths must agree bit-for-bit)."""
+    h = x_pm1
+    for w in params:
+        w_pm1 = bitops.bits_to_sign(w, h.dtype)
+        pre = h @ w_pm1.T
+        h = jnp.where(pre >= 0, 1.0, -1.0).astype(h.dtype)
+    return h
+
+
+def packed_forward(params: Sequence[jax.Array], x_bits: jax.Array) -> jax.Array:
+    """Forward pass on bit-*packed* words via XNOR + HAKMEM popcount.
+
+    This is the arithmetic the switch (and the packed Pallas kernel) actually
+    performs; validated against :func:`forward`.
+    """
+    h = x_bits
+    for w in params:
+        n_in = h.shape[-1]
+        hp = bitops.pack_bits(bitops.pad_to_word_multiple(h))
+        wp = bitops.pack_bits(bitops.pad_to_word_multiple(w))
+        dot = bitops.packed_dot(hp[..., None, :], wp, n_in)  # (..., n_out)
+        h = (dot >= 0).astype(jnp.int32)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Training support (BinaryNet-style straight-through estimator).  The paper is
+# forward-only; STE training is the framework addition that makes BNN layers
+# usable inside the assigned architectures (see kernels/ops.py for the
+# custom_vjp used by BinaryDense).
+# ---------------------------------------------------------------------------
+
+def binarize_ste(w_latent: jax.Array) -> jax.Array:
+    """sign(w) with identity gradient inside |w|<=1 (straight-through)."""
+    w_bin = jnp.where(w_latent >= 0, 1.0, -1.0).astype(w_latent.dtype)
+    # Gradient: pass-through where |w| <= 1, zero outside (BinaryNet clipping).
+    gate = (jnp.abs(w_latent) <= 1.0).astype(w_latent.dtype)
+    return w_latent * gate + jax.lax.stop_gradient(w_bin - w_latent * gate)
+
+
+def params_from_latent(latent: Sequence[jax.Array]) -> list[jax.Array]:
+    """Latent fp weights -> {0,1} bit matrices for inference export."""
+    return [bitops.sign_to_bits(w) for w in latent]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: bit-packed XNOR-popcount GEMM.
+
+The TPU-native adaptation of N2Net's compute scheme.  Operands are sign bits
+packed 32/uint32 (32x less HBM traffic than bf16 — the switch-chip insight
+"memory is the scarce resource" mapped onto the TPU memory hierarchy).  The
+inner product is ``popcount(XNOR(x̂, ŵ))`` on the VPU, with the affine
+correction folded into the epilogue.
+
+Tiling: grid (M/bm, N/bn, Kw/bkw); each step loads an (bm, bkw) x-tile and an
+(bn, bkw) w-tile into VMEM, broadcasts to (bm, bn, bkw), popcounts and
+reduces over the word axis into an (bm, bn) int32 accumulator that lives in
+the output VMEM block across the K grid dimension (k-innermost accumulation
+pattern).  Block defaults keep the broadcast tile ≤ 2 MiB of VMEM:
+128 * 128 * 8 words * 4 B = 512 KiB.
+
+There is no MXU use here by design — see ``bnn_matmul_mxu.py`` for the
+compute-bound variant; the roofline analysis in EXPERIMENTS.md quantifies
+when each wins.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WORD = 32
+
+
+def _kernel(x_ref, w_ref, o_ref, *, k_steps: int, affine: int):
+    """One (m, n, k) grid step.
+
+    x_ref: (bm, bkw) uint32;  w_ref: (bn, bkw) uint32;  o_ref: (bm, bn) int32.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    agree = jax.lax.population_count(~(x[:, None, :] ^ w[None, :, :]))
+    o_ref[...] += jnp.sum(agree.astype(jnp.int32), axis=-1)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        # dot = 2*acc - 2*K_padded + k_bits  (pad bits agree as 0/0).
+        o_ref[...] = 2 * o_ref[...] + affine
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_bits", "block_m", "block_n", "block_kw", "interpret")
+)
+def bnn_matmul_packed(
+    x_packed: jax.Array,
+    w_packed: jax.Array,
+    *,
+    k_bits: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """``sign(x) @ sign(w).T`` on packed operands.
+
+    x_packed: (M, Kw) uint32; w_packed: (N, Kw) uint32; returns (M, N) int32.
+    M, N must divide by the block sizes; Kw by block_kw (callers pad — see
+    ``ops.binary_matmul`` which handles padding and layout).
+    """
+    m, kw = x_packed.shape
+    n, kw2 = w_packed.shape
+    if kw != kw2:
+        raise ValueError(f"K mismatch: {kw} vs {kw2}")
+    if m % block_m or n % block_n or kw % block_kw:
+        raise ValueError(
+            f"shape ({m},{n},{kw}) not divisible by blocks "
+            f"({block_m},{block_n},{block_kw})"
+        )
+    k_steps = kw // block_kw
+    affine = -2 * kw * WORD + k_bits
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, affine=affine),
+        grid=(m // block_m, n // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_kw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_n, block_kw), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x_packed, w_packed)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: ±1 binary GEMM on the MXU.
+
+The compute-bound sibling of ``bnn_matmul.py``: operands are the same sign
+matrices but represented as ±1 bf16 so the systolic array does the
+contraction (the TPU analogue of the paper's "adding circuitry to perform
+computation is much cheaper" — here the idle MXU *is* that circuitry).
+
+The kernel fuses the binarize step (sign of the input tile) so the bf16
+operands never round-trip through HBM: inputs may arrive as real-valued
+activations; weights are expected pre-binarized to ±1 bf16 (they are static
+at inference, like N2Net's pre-configured SRAM weights).
+
+Tiling: classic (M/bm, N/bn, K/bk) matmul grid with an f32 VMEM accumulator
+in the output block; MXU-aligned 128-multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, k_steps: int, binarize_x: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    if binarize_x:
+        x = jnp.where(x >= 0, 1.0, -1.0).astype(jnp.bfloat16)
+    else:
+        x = x.astype(jnp.bfloat16)
+    w = w_ref[...].astype(jnp.bfloat16)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("binarize_x", "block_m", "block_n", "block_k", "interpret"),
+)
+def bnn_matmul_mxu(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    binarize_x: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``binarize(x) @ w`` with f32 accumulation on the MXU.
+
+    x: (M, K) bf16/f32 (binarized in-kernel when ``binarize_x``);
+    w: (K, N) ±1 bf16 (pre-binarized weights).  Returns (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"K mismatch: {k} vs {k2}")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"shape ({m},{n},{k}) not divisible by blocks "
+            f"({block_m},{block_n},{block_k})"
+        )
+    k_steps = k // block_k
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, binarize_x=binarize_x),
+        grid=(m // block_m, n // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

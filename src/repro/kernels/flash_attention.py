@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: fused causal attention (flash-style online softmax).
+
+The §Roofline analysis shows every training cell's memory term is dominated
+by materialized (S_q, S_k) score/prob buffers (EXPERIMENTS.md) — XLA cannot
+keep them in VMEM across the dot->mask->softmax->dot chain.  This kernel is
+the structural fix on real TPUs: scores live only in VMEM scratch; HBM
+traffic is Q + K + V + O (linear in S), independent of the score matrix.
+
+Layout: q/k/v are (BH, S, D) — batch and heads pre-flattened (GQA callers
+repeat or reshape k/v; see ``ops.flash_attention``).  Grid = (BH, S/bq);
+each step streams K/V in ``bk`` chunks with the online-softmax recurrence:
+
+    m' = max(m, rowmax(s));  l' = l*e^{m-m'} + rowsum(e^{s-m'})
+    acc' = acc*e^{m-m'} + e^{s-m'} @ V_chunk
+
+Causal masking skips nothing structurally (chunks are masked), matching the
+jnp reference exactly; the fully-masked upper chunks are a known ~2x
+compute overhead documented in EXPERIMENTS.md (the VMEM win dominates).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[...]                      # (bq, D)
+    bq, d = q.shape
+    s_total = k_ref.shape[0]
+    nk = s_total // bk
+
+    m0 = jnp.full((bq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(ki * bk, bk), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(ki * bk, bk), slice(None)))
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                        # (bq, bk)
+        if causal:
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> use 0
+        alpha = jnp.where(jnp.isfinite(m_new), jnp.exp(m - m_new), 0.0)
+        p = jnp.where(jnp.isfinite(m_new), jnp.exp(s - m_new), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused attention.  q/k/v: (BH, S, D); returns (BH, S, D) in q.dtype.
+
+    S must divide block_q and block_k (callers pad — see ops wrapper);
+    D should be a multiple of 128 for MXU alignment on real hardware.
+    """
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must divide block sizes ({block_q},{block_k})")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=block_k, causal=causal, scale=scale),
+        grid=(bh, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the binary-GEMM kernels.
+
+These are the ground truth every Pallas kernel in this package is tested
+against (``assert_allclose`` over shape/dtype sweeps, interpret=True).
+They are also the *production CPU path*: real XNOR-popcount arithmetic
+expressed in XLA ops, used whenever the Pallas TPU kernels are unavailable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def bitpack_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    """sign-bits of ``x`` packed into uint32 along ``axis`` (bit=1 iff x>=0).
+
+    The axis length must be a multiple of 32.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if n % WORD:
+        raise ValueError(f"pack axis {n} not a multiple of {WORD}")
+    bits = (jnp.moveaxis(x, axis, -1) >= 0).astype(jnp.uint32)
+    grouped = bits.reshape(bits.shape[:-1] + (n // WORD, WORD))
+    weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+    packed = jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def bnn_matmul_packed_ref(
+    x_packed: jax.Array, w_packed: jax.Array, k_bits: int
+) -> jax.Array:
+    """±1 GEMM on packed sign bits: ``out[m,n] = sum_k x[m,k] * w[n,k]``.
+
+    ``x_packed``: (M, Kw) uint32; ``w_packed``: (N, Kw) uint32; both packed
+    from ``k_bits`` genuine sign bits, zero-padded to ``Kw*32``.  Pad bits are
+    0 in both operands, so each contributes one agreement; the affine
+    correction removes them:  ``dot = 2*acc - 2*Kw*32 + k_bits``.
+    Returns (M, N) int32.
+    """
+    agree = jax.lax.population_count(~(x_packed[:, None, :] ^ w_packed[None, :, :]))
+    acc = jnp.sum(agree.astype(jnp.int32), axis=-1)
+    kw = x_packed.shape[-1]
+    return 2 * acc - 2 * kw * WORD + k_bits
+
+
+def bnn_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """±1 GEMM oracle in plain arithmetic: sign(x) @ sign(w).T as float32.
+
+    ``x``: (M, K) real; ``w``: (N, K) real.  Both are binarized with the
+    sign convention ``>= 0 -> +1``.  Returns (M, N) float32 — identical to
+    :func:`bnn_matmul_packed_ref` on the packed representations.
+    """
+    xs = jnp.where(x >= 0, 1.0, -1.0).astype(jnp.float32)
+    ws = jnp.where(w >= 0, 1.0, -1.0).astype(jnp.float32)
+    return xs @ ws.T
+
+
+def bnn_matmul_mxu_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for the MXU kernel: ±1 bf16 operands, f32 accumulation."""
+    xs = jnp.where(x >= 0, 1, -1).astype(jnp.bfloat16)
+    ws = jnp.where(w >= 0, 1, -1).astype(jnp.bfloat16)
+    return jnp.dot(xs, ws.T, preferred_element_type=jnp.float32)
+
+
+def xnor_dense_ref(
+    x: jax.Array, w: jax.Array, alpha: jax.Array | None = None,
+    beta: jax.Array | None = None,
+) -> jax.Array:
+    """XNOR-Net style binary dense: scaled ±1 GEMM.
+
+    ``alpha``: per-output-channel |w| mean (N,); ``beta``: per-row |x| mean
+    (M, 1).  Either may be None (unscaled).
+    """
+    out = bnn_matmul_ref(x, w)
+    if alpha is not None:
+        out = out * alpha[None, :]
+    if beta is not None:
+        out = out * beta
+    return out

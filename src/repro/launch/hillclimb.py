@@ -1,0 +1,84 @@
+"""§Perf hillclimbing driver: run named optimization variants of the three
+selected cells on the production pod mesh and log before/after roofline
+terms.
+
+Cells (selection rationale in EXPERIMENTS.md §Perf):
+  A. deepseek-v2-236b  train_4k   — worst roofline fraction & most
+     collective-bound (FSDP gathers x microbatches dominate).
+  B. chatglm3-6b       train_4k   — collective-bound dense TP (f32
+     all-reduces), plus the attention-score memory term.
+  C. phi3-mini-3.8b    decode_32k — most representative of the paper's
+     technique: N2Net packed-weight (XNOR-popcount) inference.
+
+Usage: PYTHONPATH=src python -m repro.launch.hillclimb [--only A1,B2,...]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("N2NET_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+from repro.configs.base import QuantConfig  # noqa: E402
+from repro.launch.dryrun import run_cell    # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+EXPERIMENTS = {
+    # --- cell A: deepseek train (collective-bound: FSDP gathers + f32 AR) ---
+    "A1": ("deepseek-v2-236b", "train_4k", {"ar_bf16": True}, "+arbf16"),
+    "A2": ("deepseek-v2-236b", "train_4k",
+           {"ar_bf16": True, "microbatches": 8}, "+arbf16+mb8"),
+    "A3": ("deepseek-v2-236b", "train_4k",
+           {"ar_bf16": True, "microbatches": 8, "attn_scores_dtype": "bf16"},
+           "+arbf16+mb8+sbf16"),
+    # --- cell B: chatglm train (f32 AR + score traffic) ---
+    "B1": ("chatglm3-6b", "train_4k", {"ar_bf16": True}, "+arbf16"),
+    "B2": ("chatglm3-6b", "train_4k",
+           {"ar_bf16": True, "attn_scores_dtype": "bf16"}, "+arbf16+sbf16"),
+    "B3": ("chatglm3-6b", "train_4k",
+           {"ar_bf16": True, "attn_scores_dtype": "bf16", "microbatches": 4},
+           "+arbf16+sbf16+mb4"),
+    # --- cell C: phi3 decode (the paper's technique: packed BNN weights) ---
+    "C1": ("phi3-mini-3.8b", "decode_32k",
+           {"quant": QuantConfig(mode="bnn_packed",
+                                 targets=("ffn", "attn_proj"))}, "+bnnpacked"),
+    "C2": ("phi3-mini-3.8b", "prefill_32k",
+           {"quant": QuantConfig(mode="bnn_packed",
+                                 targets=("ffn", "attn_proj"))}, "+bnnpacked"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    names = list(EXPERIMENTS) if args.only == "all" else args.only.split(",")
+
+    mesh = make_production_mesh(multi_pod=False)
+    for name in names:
+        arch, shape, overrides, tag = EXPERIMENTS[name]
+        base = json.load(open(f"experiments/dryrun/{arch}_{shape}_pod.json"))
+        rec = run_cell(arch, shape, mesh, "pod", args.out, overrides, tag)
+        if rec["status"] != "ok":
+            print(f"[{name}] ERROR: {rec.get('error')}", flush=True)
+            continue
+        b, r = base["roofline"], rec["roofline"]
+        print(
+            f"[{name}] {arch} {shape} {tag}\n"
+            f"  compute    {b['compute_s']:.4g} -> {r['compute_s']:.4g}\n"
+            f"  memory     {b['memory_s']:.4g} -> {r['memory_s']:.4g}\n"
+            f"  collective {b['collective_s']:.4g} -> {r['collective_s']:.4g}\n"
+            f"  step(max)  {b['step_time_s']:.4g} -> {r['step_time_s']:.4g} "
+            f"({b['step_time_s']/max(r['step_time_s'],1e-12):.2f}x)\n"
+            f"  roofline_frac {b['roofline_fraction']:.4f} -> "
+            f"{r['roofline_fraction']:.4f}",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Serving launcher: stand up an Engine for an architecture and drain a
+synthetic request stream (the cluster-facing sibling of
+examples/serve_batched.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.engine import Engine, Request
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        from examples.serve_batched import small
+
+        cfg = small(cfg)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(4, 24))).astype(np.int32),
+            max_new_tokens=args.new_tokens,
+        ))
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Assigned input shapes and per-(arch × shape) input specs.
+
+Shapes (LM-family, per the assignment):
+  train_4k    — seq 4096,    global batch 256 (training step)
+  prefill_32k — seq 32768,   global batch 32  (inference prefill)
+  decode_32k  — seq 32768,   global batch 128 (one token vs 32k cache)
+  long_500k   — seq 524288,  global batch 1   (long-context decode)
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token with a KV/SSM
+cache of seq_len), not ``train_step``.  Skips (recorded in DESIGN.md
+§Arch-applicability): ``long_500k`` for pure full-attention archs;
+``decode_32k``/``long_500k`` for encoder-only archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs, and the reason when skipped."""
+    if shape.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k requires sub-quadratic attention (full-attn arch)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStruct stand-ins for a training batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "frames":
+        return {
+            "frames": _sds((b, s, cfg.d_model), cfg.param_dtype()),
+            "labels": _sds((b, s), jnp.int32),
+        }
+    if cfg.input_mode == "tokens+patches":
+        st = s - cfg.num_patches
+        return {
+            "tokens": _sds((b, st), jnp.int32),
+            "patches": _sds((b, cfg.num_patches, cfg.d_model), cfg.param_dtype()),
+            "labels": _sds((b, st), jnp.int32),
+        }
+    return {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+
+
+def prefill_inputs(cfg: ModelConfig, shape: Shape) -> dict:
+    batch = train_inputs(cfg, shape)
+    batch.pop("labels", None)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: Shape) -> tuple:
+    """(token, cache) stand-ins for a decode step."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    token = _sds((b,), jnp.int32)
+    return token, cache
+
+
+def microbatches_for(cfg: ModelConfig, shape: Shape, dp_size: int) -> int:
+    """Gradient-accumulation factor: as many microbatches as the batch allows
+    without dropping below one sequence per data shard."""
+    if shape.kind != "train":
+        return 1
+    want = getattr(cfg, "microbatches", 1) or 1
+    return max(1, min(want, shape.global_batch // max(1, dp_size)))

@@ -1,0 +1,70 @@
+"""Cluster training launcher.
+
+On a real fleet this binary runs once per host under the cluster scheduler;
+``jax.distributed.initialize`` wires the hosts together and the mesh spans
+all devices.  In this container it runs single-process (the mesh comes from
+``make_local_mesh``), exercising the identical code path.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch phi3-mini-3.8b \
+      --steps 100 --batch 8 --seq 128 [--reduced] [--quant bnn_weight_only]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--quant", default="none")
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+
+        jax.distributed.initialize()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import QuantConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        from examples.train_lm import reduced  # same recipe as the example
+
+        cfg = reduced(cfg)
+    if args.quant != "none":
+        cfg = dataclasses.replace(cfg, quant=QuantConfig(mode=args.quant))
+
+    mesh = make_local_mesh()
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        checkpoint_every=max(10, args.steps // 4),
+        checkpoint_dir=args.ckpt_dir,
+        microbatches=args.microbatches,
+        compression=args.compression,
+        global_batch=args.batch,
+        seq_len=args.seq,
+    )
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
+    out = trainer.run()
+    print(f"done at step {out['final_step']}; recoveries={out['recoveries']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.layers import attention, embedding, ffn, linear, mamba2, mla, moe, norms, rope
+
+__all__ = [
+    "attention",
+    "embedding",
+    "ffn",
+    "linear",
+    "mamba2",
+    "mla",
+    "moe",
+    "norms",
+    "rope",
+]

@@ -1,0 +1,281 @@
+"""Attention: GQA with chunked (flash-style) causal prefill and cached decode.
+
+Memory discipline: prefill never materializes the full (S, S) score matrix —
+a ``lax.scan`` over query chunks computes softmax rows per chunk (peak
+activation O(S * q_chunk) per head), which is what makes the 32k-prefill
+dry-run cells fit HBM.  GQA is computed in grouped form (no KV head
+repetition in memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import rope
+from repro.layers.linear import dense_apply, dense_init
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer-stack KV cache: arrays stacked over layers.
+
+    k, v: (L, B, S_max, KVH, D); ``index``: current length (scalar int32).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    index: jax.Array
+
+    @staticmethod
+    def init(cfg: ModelConfig, batch: int, max_len: int, layers: int) -> "KVCache":
+        d = cfg.resolved_head_dim
+        shape = (layers, batch, max_len, cfg.num_kv_heads, d)
+        return KVCache(
+            k=jnp.zeros(shape, cfg.param_dtype()),
+            v=jnp.zeros(shape, cfg.param_dtype()),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+
+jax.tree_util.register_dataclass(KVCache, ["k", "v", "index"], [])
+
+
+def attention_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, kvh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    q, t = cfg.quant, "attn_proj"
+    return {
+        "wq": dense_init(ks[0], d, h * hd, std=cfg.init_std, dtype=dtype, quant=q, tag=t),
+        "wk": dense_init(ks[1], d, kvh * hd, std=cfg.init_std, dtype=dtype, quant=q, tag=t),
+        "wv": dense_init(ks[2], d, kvh * hd, std=cfg.init_std, dtype=dtype, quant=q, tag=t),
+        "wo": dense_init(ks[3], h * hd, d, std=cfg.init_std, dtype=dtype, quant=q, tag=t),
+    }
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """q: (B, Sq, KVH, G, D), k: (B, Sk, KVH, D) -> (B, KVH, G, Sq, Sk).
+
+    ``dtype=bf16`` halves the materialized score-buffer HBM traffic; the
+    softmax still reduces in f32 element-wise inside the consumer fusion.
+    """
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=dtype)
+
+
+def _grouped_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B, KVH, G, Sq, Sk), v: (B, Sk, KVH, D) -> (B, Sq, KVH, G, D) f32."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v, preferred_element_type=jnp.float32)
+
+
+def _flash_full(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool, scale: float
+) -> jax.Array:
+    """Full-sequence attention through the fused Pallas kernel.
+
+    q: (B, S, H, D); k/v: (B, S, KVH, D).  GQA KV heads are repeated to H
+    (the kernel consumes flattened (B*H, S, D)); on TPU the repeat is a
+    broadcast the compiler keeps virtual.  Interpret mode on CPU.
+    """
+    from repro.kernels.flash_attention import flash_attention
+
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    block = 128
+    while s % block:
+        block //= 2
+    out = flash_attention(
+        qf, kf, vf, causal=causal, scale=scale,
+        block_q=block, block_k=block,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_chunk: int,
+    scale: float,
+    scores_dtype=jnp.float32,
+) -> jax.Array:
+    """Softmax attention over full K/V, scanning query chunks.
+
+    q: (B, S, H, D); k, v: (B, S, KVH, D).  Returns (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA: v_head_dim != qk dim)
+    g = h // kvh
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk:
+        # pad the query axis; padded rows are discarded after the scan
+        pad = q_chunk - s % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q.shape[1] // q_chunk
+    qg = q.reshape(b, nc, q_chunk, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+    kpos = jnp.arange(k.shape[1])
+
+    # The chunk index is a loop CARRY (not xs): were it an xs/iota, XLA's
+    # while-loop wide-expansion would hoist the per-chunk causal mask out of
+    # the chunk scan AND the layer scan, materializing an
+    # O(layers * nc * Cq * S) predicate buffer (observed: 2.2 GiB/device).
+    def body(ci, qc):  # qc: (B, Cq, KVH, G, D)
+        scores = _grouped_scores(qc, k, scores_dtype) * jnp.asarray(scale, scores_dtype)
+        if causal:
+            qpos = ci * q_chunk + jnp.arange(q_chunk)
+            mask = kpos[None, :] <= qpos[:, None]  # (Cq, Sk)
+            scores = jnp.where(
+                mask[None, None, None], scores, jnp.asarray(-jnp.inf, scores_dtype)
+            )
+        # bf16 probs: halves the score/prob HBM traffic and the backward
+        # stash; standard practice (accumulation stays f32 in the PV dot).
+        p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+        out = _grouped_out(p, v)  # (B, Cq, KVH, G, D)
+        return ci + 1, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, jnp.zeros((), jnp.int32), qg)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nc * q_chunk, h, dv)
+    return out[:, :s]
+
+
+def decode_attention_incremental(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    index: jax.Array,
+    *,
+    scale: float,
+) -> jax.Array:
+    """Decode attention WITHOUT writing the token into the cache first.
+
+    The cache (positions < index) is read-only; the current token's k/v are
+    attended as an explicit extra column.  This keeps the per-step HBM
+    traffic at one cache *read* — the caller updates the cache with a
+    single-position dynamic_update_slice (writes B*KVH*D bytes, not the
+    whole (B, S, KVH, D) slice).
+
+    q: (B, 1, H, D); caches: (B, S, KVH, D); k_new/v_new: (B, 1, KVH, D).
+    """
+    b, _, h, d = q.shape
+    kvh = k_cache.shape[2]
+    qg = q.reshape(b, 1, kvh, h // kvh, d)
+    s_c = _grouped_scores(qg, k_cache) * scale          # (B, KVH, G, 1, S)
+    mask = jnp.arange(k_cache.shape[1]) < index
+    s_c = jnp.where(mask[None, None, None, None, :], s_c, -jnp.inf)
+    s_n = _grouped_scores(qg, k_new) * scale            # (B, KVH, G, 1, 1)
+    joint = jnp.concatenate([s_c, s_n], axis=-1)
+    p = jax.nn.softmax(joint, axis=-1)
+    out = _grouped_out(p[..., :-1], v_cache) + _grouped_out(p[..., -1:], v_new)
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    index: jax.Array,
+    *,
+    scale: float,
+) -> jax.Array:
+    """Single-position attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, S_max, KVH, D); ``index`` = position of the
+    new token (attends to [0, index]).
+    """
+    b, _, h, d = q.shape
+    kvh = k_cache.shape[2]
+    qg = q.reshape(b, 1, kvh, h // kvh, d)
+    scores = _grouped_scores(qg, k_cache) * scale  # (B, KVH, G, 1, S)
+    mask = jnp.arange(k_cache.shape[1]) <= index
+    scores = jnp.where(mask[None, None, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(p, v_cache)
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+def attention_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    layer_cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> tuple[jax.Array, Optional[dict]]:
+    """GQA block.  x: (B, S, d).
+
+    Prefill/train: ``layer_cache=None`` -> full chunked attention; returns
+    (out, None) or (out, fresh cache entries when ``cache_index`` is given).
+    Decode: ``layer_cache={'k','v'}`` (B, S_max, KVH, D) and ``cache_index``
+    -> writes the new position, attends against the cache.
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = dense_apply(params["wq"], x, quant=cfg.quant, tag="attn_proj")
+    k = dense_apply(params["wk"], x, quant=cfg.quant, tag="attn_proj")
+    v = dense_apply(params["wv"], x, quant=cfg.quant, tag="attn_proj")
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if cfg.rotary_pct > 0:
+        q = rope.rotate(q, positions, theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct)
+        k = rope.rotate(k, positions, theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct)
+    scale = 1.0 / (hd ** 0.5)
+
+    new_cache = None
+    if layer_cache is not None:
+        if cfg.decode_cache_carry:
+            # read-only cache + explicit current-token column; the caller
+            # commits {k,v} via a single-position update (models.decode_step).
+            out = decode_attention_incremental(
+                q, layer_cache["k"], layer_cache["v"], k, v, cache_index,
+                scale=scale,
+            )
+            new_cache = {"k": k, "v": v}  # (B, 1, KVH, D): new position only
+        else:
+            # ys path (sequence-sharded caches): commit into the slice, then
+            # attend mask<=index — concatenating a score column onto the
+            # sharded sequence axis forces a reshard, measured 7x worse.
+            kc = jax.lax.dynamic_update_slice(
+                layer_cache["k"], k.astype(layer_cache["k"].dtype),
+                (0, cache_index, 0, 0),
+            )
+            vc = jax.lax.dynamic_update_slice(
+                layer_cache["v"], v.astype(layer_cache["v"].dtype),
+                (0, cache_index, 0, 0),
+            )
+            out = decode_attention(q, kc, vc, cache_index, scale=scale)
+            new_cache = {"k": kc, "v": vc}  # full updated slice (scan ys)
+    elif cfg.attn_impl == "pallas_flash":
+        out = _flash_full(q, k, v, causal=causal, scale=scale)
+    else:
+        out = chunked_attention(
+            q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk, scale=scale,
+            scores_dtype=jnp.bfloat16 if cfg.attn_scores_dtype == "bf16" else jnp.float32,
+        )
+        if cache_index is not None:  # prefill that seeds a cache
+            new_cache = {"k": k, "v": v}
+    out = out.reshape(b, s, h * hd)
+    out = dense_apply(params["wo"], out, quant=cfg.quant, tag="attn_proj")
+    if cfg.ar_bf16:
+        # keep the TP partial-sum all-reduce in bf16: the barrier stops XLA
+        # from hoisting the downstream f32 upcast above the collective.
+        out = jax.lax.optimization_barrier(out)
+    return out, new_cache

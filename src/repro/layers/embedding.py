@@ -1,0 +1,18 @@
+"""Token embedding and output head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_init(key: jax.Array, vocab: int, d: int, *, std=0.02, dtype=jnp.float32) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * std).astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Logits in f32 (vocab axis sharded over 'model' by the rule table)."""
+    return (x.astype(jnp.float32) @ params["table"].astype(jnp.float32).T)

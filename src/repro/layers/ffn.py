@@ -1,0 +1,38 @@
+"""Feed-forward blocks: SwiGLU (gated) and GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.linear import dense_apply, dense_init
+
+
+def ffn_init(key: jax.Array, d: int, f: int, act: str, *, std=0.02,
+             dtype=jnp.float32, quant=None) -> dict:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, f, std=std, dtype=dtype, quant=quant, tag="ffn"),
+            "w_up": dense_init(ks[1], d, f, std=std, dtype=dtype, quant=quant, tag="ffn"),
+            "w_down": dense_init(ks[2], f, d, std=std, dtype=dtype, quant=quant, tag="ffn"),
+        }
+    return {
+        "w_in": dense_init(ks[0], d, f, std=std, dtype=dtype, quant=quant, tag="ffn"),
+        "w_out": dense_init(ks[1], f, d, std=std, dtype=dtype, quant=quant, tag="ffn"),
+    }
+
+
+def ffn_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "w_gate" in params:
+        g = dense_apply(params["w_gate"], x, quant=cfg.quant, tag="ffn")
+        u = dense_apply(params["w_up"], x, quant=cfg.quant, tag="ffn")
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        out = dense_apply(params["w_down"], h, quant=cfg.quant, tag="ffn")
+    else:
+        h = dense_apply(params["w_in"], x, quant=cfg.quant, tag="ffn")
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        out = dense_apply(params["w_out"], h, quant=cfg.quant, tag="ffn")
+    if cfg.ar_bf16:
+        out = jax.lax.optimization_barrier(out)  # bf16 TP all-reduce
+    return out

@@ -1,0 +1,101 @@
+"""Dense and BinaryDense projections.
+
+``BinaryDense`` is the paper's technique as a framework feature, in two
+regimes selected by the architecture's ``QuantConfig``:
+
+  * training (``bnn_weight_only`` / ``bnn_xnor``): latent full-precision
+    master weights, binarized forward, straight-through gradients
+    (``repro.kernels.ops``).
+  * inference (``bnn_packed``): weights are *stored* as packed uint32 sign
+    words (32 weights per word, 16x less HBM than bf16) plus a per-channel
+    alpha; the contraction is XNOR + popcount + affine — N2Net's arithmetic
+    on the TPU.  Expressed as an xor/popcount/reduce chain so XLA fuses it
+    without materializing the (M, N, Kw) intermediate; the Pallas kernel
+    (``kernels/bnn_matmul.py``) is the hand-tiled TPU version of the same
+    contraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig
+from repro.kernels import ops as kops
+
+WORD = 32
+
+
+def dense_init(
+    key: jax.Array, in_dim: int, out_dim: int, *, std: float = 0.02,
+    dtype=jnp.float32, quant: QuantConfig | None = None, tag: str = "",
+) -> dict:
+    """Weights stored (out, in) — matches the kernels' (N, K) convention.
+
+    With packed quantization active for ``tag``, stores
+    {w_packed: (out, ceil(in/32)) uint32, alpha: (out,) f32} instead.
+    """
+    w = jax.random.normal(key, (out_dim, in_dim), jnp.float32) * std
+    if quant is not None and quant.packed and tag in quant.targets:
+        bits = (w >= 0).astype(jnp.uint32)
+        pad = (-in_dim) % WORD
+        if pad:
+            bits = jnp.pad(bits, ((0, 0), (0, pad)))
+        grouped = bits.reshape(out_dim, -1, WORD)
+        weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+        packed = jnp.sum(grouped * weights, axis=-1, dtype=jnp.uint32)
+        return {"w_packed": packed, "alpha": jnp.mean(jnp.abs(w), axis=-1)}
+    return {"w": w.astype(dtype)}
+
+
+def _packed_apply(params: dict, x: jax.Array) -> jax.Array:
+    """XNOR-popcount contraction against packed weights (XNOR-Net scaling).
+
+    x: (..., K) real -> binarized; w_packed: (N, Kw).  The xor/popcount
+    broadcast stays inside one XLA reduce fusion: HBM traffic is the packed
+    weights + packed activations + the (M, N) output.
+    """
+    wp = params["w_packed"]
+    alpha = params["alpha"]
+    lead, k = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, k)
+    beta = jnp.mean(jnp.abs(x2.astype(jnp.float32)), axis=-1, keepdims=True)
+
+    bits = (x2 >= 0).astype(jnp.uint32)
+    pad = (-k) % WORD
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    grouped = bits.reshape(x2.shape[0], -1, WORD)
+    lanes = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+    xp = jnp.sum(grouped * lanes, axis=-1, dtype=jnp.uint32)   # (M, Kw)
+
+    agree = jax.lax.population_count(~(xp[:, None, :] ^ wp[None, :, :]))
+    acc = jnp.sum(agree.astype(jnp.int32), axis=-1)            # (M, N)
+    kw = xp.shape[-1]
+    dot = (2 * acc - 2 * kw * WORD + k).astype(jnp.float32)
+    y = dot * alpha[None, :] * beta
+    return y.reshape(*lead, wp.shape[0]).astype(x.dtype)
+
+
+def dense_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    quant: QuantConfig | None = None,
+    tag: str = "",
+) -> jax.Array:
+    """y = x @ W.T, binarized when ``tag`` is in the quant targets.
+
+    x: (..., K); W: (N, K); returns (..., N) in x.dtype.
+    """
+    if "w_packed" in params:
+        return _packed_apply(params, x)
+    w = params["w"]
+    if quant is not None and quant.enabled and not quant.packed and tag in quant.targets:
+        lead = x.shape[:-1]
+        y = kops.binary_dense_train(
+            x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+            w.astype(jnp.float32),
+            scale=quant.scale,
+        )
+        return y.reshape(*lead, w.shape[0]).astype(x.dtype)
+    return (x @ w.T.astype(x.dtype)).astype(x.dtype)

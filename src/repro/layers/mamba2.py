@@ -1,0 +1,213 @@
+"""Mamba2 block with the SSD (state-space duality) algorithm.
+
+Chunked formulation (the paper's tensor-core-friendly algorithm, which maps
+directly onto the TPU MXU): sequence split into chunks of ``cfg.ssm.chunk``;
+within a chunk the recurrence is computed in closed quadratic
+(attention-like) form, across chunks a tiny ``lax.scan`` carries the
+(H, N, P) state.  Single-token decode is the O(1) recurrence update.
+
+ngroups == 1 (B/C shared across heads), matching the assigned configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.linear import dense_apply, dense_init
+from repro.layers.norms import rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass
+class SsmCache:
+    """h: (L, B, H, N, P) SSD state; conv_x/conv_bc: (L, B, W-1, ·) window tails."""
+
+    h: jax.Array
+    conv_x: jax.Array
+    conv_bc: jax.Array
+    index: jax.Array
+
+    @staticmethod
+    def init(cfg: ModelConfig, batch: int, layers: int) -> "SsmCache":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        heads = d_inner // s.head_dim
+        return SsmCache(
+            h=jnp.zeros((layers, batch, heads, s.state_dim, s.head_dim), jnp.float32),
+            conv_x=jnp.zeros((layers, batch, s.conv_width - 1, d_inner), cfg.param_dtype()),
+            conv_bc=jnp.zeros((layers, batch, s.conv_width - 1, 2 * s.state_dim), cfg.param_dtype()),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+
+jax.tree_util.register_dataclass(SsmCache, ["h", "conv_x", "conv_bc", "index"], [])
+
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Projections are stored *separately* (z / x / bc / dt) instead of one
+    fused in_proj so each shards cleanly under TP: z/x/dt are head-aligned
+    (sharded over 'model'), bc (the shared B/C with ngroups=1) is replicated.
+    The depthwise conv splits the same way (conv_x sharded, conv_bc
+    replicated)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    heads = d_inner // s.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "z_proj": dense_init(ks[0], d, d_inner, std=cfg.init_std, dtype=dtype),
+        "x_proj": dense_init(ks[1], d, d_inner, std=cfg.init_std, dtype=dtype),
+        "bc_proj": dense_init(ks[2], d, 2 * s.state_dim, std=cfg.init_std, dtype=dtype),
+        "dt_proj": dense_init(ks[3], d, heads, std=cfg.init_std, dtype=dtype),
+        "conv_x_w": (jax.random.normal(ks[4], (s.conv_width, d_inner), jnp.float32)
+                     * (1.0 / s.conv_width)).astype(dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[5], (s.conv_width, 2 * s.state_dim), jnp.float32)
+                      * (1.0 / s.conv_width)).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * s.state_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[0], d_inner, d, std=cfg.init_std, dtype=dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W.  xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):  # W = 4: unrolled taps beat a conv op at this size
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(
+    x: jax.Array, dt: jax.Array, a_neg: jax.Array,
+    bmat: jax.Array, cmat: jax.Array, chunk: int,
+    h0: jax.Array | None = None,
+):
+    """SSD scan.  x: (B,S,H,P); dt: (B,S,H); a_neg: (H,) negative;
+    bmat/cmat: (B,S,N).  Returns (y (B,S,H,P) f32, h_final (B,H,N,P) f32)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    L = min(chunk, s)
+    if s % L:
+        pad = L - s % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // L
+
+    xc = x.reshape(b, nc, L, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, L, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, L, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, L, n).astype(jnp.float32)
+
+    ac = dtc * a_neg  # (B,nc,L,H) log-decay, <= 0
+    cum = jnp.cumsum(ac, axis=2)
+    dtx = xc * dtc[..., None]  # (B,nc,L,H,P)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    cb = jnp.einsum("bctn,bcsn->bcts", cc, bc)            # (B,nc,L,L)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Lt,Ls,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    m = decay * cb[:, :, :, :, None]                       # (B,nc,Lt,Ls,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, dtx)
+
+    # --- chunk states ---
+    last = cum[:, :, -1:, :]                               # (B,nc,1,H)
+    state_decay = jnp.exp(last - cum)                      # (B,nc,L,H)
+    states = jnp.einsum("bcsh,bcsn,bcshp->bchnp", state_decay, bc, dtx)
+
+    # --- inter-chunk state scan ---
+    lam = jnp.exp(last[:, :, 0, :])                        # (B,nc,H)
+    h_init = (
+        jnp.zeros((b, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def body(hprev, args):
+        lam_c, s_c = args                                  # (B,H), (B,H,N,P)
+        hnew = hprev * lam_c[:, :, None, None] + s_c
+        return hnew, hprev
+
+    lam_t = jnp.moveaxis(lam, 1, 0)                        # (nc,B,H)
+    st_t = jnp.moveaxis(states, 1, 0)                      # (nc,B,H,N,P)
+    h_final, h_prevs = jax.lax.scan(body, h_init, (lam_t, st_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bctn,bchnp->bcthp", cc, h_prevs) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, nc * L, h, p)[:, :s]
+    return y, h_final
+
+
+def mamba2_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    layer_cache: dict | None = None,
+    cache_index: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Mamba2 mixer.  x: (B, S, d) -> (out (B, S, d), new cache or None)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    d_inner = s_cfg.expand * d
+    heads = d_inner // s_cfg.head_dim
+    n = s_cfg.state_dim
+
+    z = dense_apply(params["z_proj"], x, quant=cfg.quant, tag="ssm_proj")
+    xp = dense_apply(params["x_proj"], x, quant=cfg.quant, tag="ssm_proj")
+    bc = dense_apply(params["bc_proj"], x, quant=cfg.quant, tag="ssm_proj")
+    dt_raw = dense_apply(params["dt_proj"], x, quant=cfg.quant, tag="ssm_proj")
+    a_neg = -jnp.exp(params["A_log"])  # (H,)
+
+    if layer_cache is not None:
+        # ---- O(1) decode step (S == 1) ----
+        win_x = jnp.concatenate(
+            [layer_cache["conv_x"], xp.astype(layer_cache["conv_x"].dtype)], axis=1
+        )  # (B, W, d_inner)
+        win_bc = jnp.concatenate(
+            [layer_cache["conv_bc"], bc.astype(layer_cache["conv_bc"].dtype)], axis=1
+        )
+        cx = jnp.einsum("bwc,wc->bc", win_x, params["conv_x_w"].astype(win_x.dtype))
+        cx = jax.nn.silu((cx + params["conv_x_b"]).astype(jnp.float32))
+        cbc = jnp.einsum("bwc,wc->bc", win_bc, params["conv_bc_w"].astype(win_bc.dtype))
+        cbc = jax.nn.silu((cbc + params["conv_bc_b"]).astype(jnp.float32))
+
+        xs = cx.reshape(b, heads, s_cfg.head_dim)
+        bmat, cmat = cbc[:, :n], cbc[:, n:]
+        dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32) + params["dt_bias"])
+        lam = jnp.exp(dt * a_neg)                          # (B,H)
+        dbx = jnp.einsum("bh,bn,bhp->bhnp", dt, bmat, xs.astype(jnp.float32))
+        h_new = layer_cache["h"] * lam[:, :, None, None] + dbx
+        y = jnp.einsum("bn,bhnp->bhp", cmat, h_new)
+        y = y + params["D"][:, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, 1, d_inner)
+        new_cache = {"h": h_new, "conv_x": win_x[:, 1:, :], "conv_bc": win_bc[:, 1:, :]}
+    else:
+        cx = _causal_conv(xp, params["conv_x_w"], params["conv_x_b"])
+        cbc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"])
+        xs = cx.reshape(b, s, heads, s_cfg.head_dim)
+        bmat, cmat = cbc[..., :n], cbc[..., n:]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+        y, h_final = _ssd_chunked(xs, dt, a_neg, bmat, cmat, s_cfg.chunk)
+        y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(b, s, d_inner)
+        new_cache = None
+        if cache_index is not None:  # prefill that seeds a decode cache
+            def tail(arr):
+                w = s_cfg.conv_width - 1
+                return jnp.pad(arr, ((0, 0), (max(0, w - s), 0), (0, 0)))[:, -w:, :]
+
+            new_cache = {"h": h_final, "conv_x": tail(xp), "conv_bc": tail(bc)}
+
+    gate = jax.nn.silu(z.astype(jnp.float32)) * y
+    gate = rmsnorm(params["norm"], gate.astype(x.dtype), cfg.norm_eps)
+    out = dense_apply(params["out_proj"], gate, quant=cfg.quant, tag="ssm_proj")
+    return out, new_cache

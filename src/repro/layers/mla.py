@@ -1,0 +1,161 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus
+the shared decoupled rope key (qk_rope_dim) per position — the technique's
+whole point.  Decode uses the *absorbed* formulation: query nope components
+are projected into latent space so scores are taken directly against the
+cached latents (no per-step re-expansion of K/V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers import rope
+from repro.layers.linear import dense_apply, dense_init
+from repro.layers.norms import rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass
+class MlaCache:
+    """c_kv: (L, B, S_max, kv_lora); k_rope: (L, B, S_max, rope_dim)."""
+
+    c_kv: jax.Array
+    k_rope: jax.Array
+    index: jax.Array
+
+    @staticmethod
+    def init(cfg: ModelConfig, batch: int, max_len: int, layers: int) -> "MlaCache":
+        m = cfg.mla
+        return MlaCache(
+            c_kv=jnp.zeros((layers, batch, max_len, m.kv_lora_rank), cfg.param_dtype()),
+            k_rope=jnp.zeros((layers, batch, max_len, m.qk_rope_dim), cfg.param_dtype()),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+
+jax.tree_util.register_dataclass(MlaCache, ["c_kv", "k_rope", "index"], [])
+
+
+def mla_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d, m.q_lora_rank, std=cfg.init_std, dtype=dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[1], m.q_lora_rank, h * qk, std=cfg.init_std, dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[1], d, h * qk, std=cfg.init_std, dtype=dtype)
+    p["wkv_a"] = dense_init(
+        ks[2], d, m.kv_lora_rank + m.qk_rope_dim, std=cfg.init_std, dtype=dtype
+    )
+    p["kv_norm"] = rmsnorm_init(m.kv_lora_rank, dtype)
+    p["wkv_b"] = dense_init(
+        ks[3], m.kv_lora_rank, h * (m.qk_nope_dim + m.v_head_dim),
+        std=cfg.init_std, dtype=dtype,
+    )
+    p["wo"] = dense_init(ks[4], h * m.v_head_dim, d, std=cfg.init_std, dtype=dtype)
+    return p
+
+
+def _project_q(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    m = cfg.mla
+    b, s, _ = x.shape
+    if m.q_lora_rank:
+        cq = dense_apply(params["wq_a"], x, quant=cfg.quant, tag="attn_proj")
+        cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+        q = dense_apply(params["wq_b"], cq, quant=cfg.quant, tag="attn_proj")
+    else:
+        q = dense_apply(params["wq"], x, quant=cfg.quant, tag="attn_proj")
+    return q.reshape(b, s, cfg.num_heads, m.qk_nope_dim + m.qk_rope_dim)
+
+
+def mla_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    layer_cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> tuple[jax.Array, Optional[dict]]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    scale = 1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+
+    q = _project_q(params, x, cfg)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = rope.rotate(q_rope, positions, theta=cfg.rope_theta)
+
+    kv_a = dense_apply(params["wkv_a"], x, quant=cfg.quant, tag="attn_proj")
+    c_kv, k_rope = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank :]
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    # shared single-head rope key
+    k_rope = rope.rotate(k_rope[:, :, None, :], positions, theta=cfg.rope_theta)[
+        :, :, 0, :
+    ]
+
+    w_kv_b = params["wkv_b"]["w"].reshape(
+        h, m.qk_nope_dim + m.v_head_dim, m.kv_lora_rank
+    )
+    w_uk = w_kv_b[:, : m.qk_nope_dim, :]   # (H, nope, lora)
+    w_uv = w_kv_b[:, m.qk_nope_dim :, :]   # (H, v, lora)
+
+    new_cache = None
+    if layer_cache is not None:
+        # absorbed decode against the READ-ONLY latent cache (positions <
+        # index) plus the current token as an explicit extra column; the
+        # caller commits the (B, 1, ·) entries with a single-position update.
+        ckv_c, krope_c = layer_cache["c_kv"], layer_cache["k_rope"]
+        q_lat = jnp.einsum("bshd,hdc->bshc", q_nope, w_uk.astype(q_nope.dtype))
+        scores = (
+            jnp.einsum("bshc,btc->bhst", q_lat, ckv_c, preferred_element_type=jnp.float32)
+            + jnp.einsum("bshr,btr->bhst", q_rope, krope_c, preferred_element_type=jnp.float32)
+        ) * scale  # (B, H, 1, S)
+        mask = jnp.arange(ckv_c.shape[1]) < cache_index
+        scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+        s_new = (
+            jnp.einsum("bshc,btc->bhst", q_lat, c_kv.astype(q_lat.dtype),
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bshr,btr->bhst", q_rope, k_rope.astype(q_rope.dtype),
+                         preferred_element_type=jnp.float32)
+        ) * scale  # (B, H, 1, 1)
+        p = jax.nn.softmax(jnp.concatenate([scores, s_new], axis=-1), axis=-1)
+        out_lat = jnp.einsum("bhst,btc->bshc", p[..., :-1], ckv_c.astype(jnp.float32))
+        out_lat = out_lat + jnp.einsum(
+            "bhst,btc->bshc", p[..., -1:], c_kv.astype(jnp.float32)
+        )
+        out = jnp.einsum("bshc,hvc->bshv", out_lat, w_uv.astype(jnp.float32))
+        out = out.astype(x.dtype)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}  # (B, 1, ·): new position
+    else:
+        # prefill / train: expand K, V and run chunked attention
+        kv = dense_apply(params["wkv_b"], c_kv, quant=cfg.quant, tag="attn_proj")
+        kv = kv.reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+        k_nope, v = kv[..., : m.qk_nope_dim], kv[..., m.qk_nope_dim :]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.qk_rope_dim))],
+            axis=-1,
+        )
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        from repro.layers.attention import chunked_attention
+
+        # pad v to qk dim for the shared kernel? no — v dim differs; chunked
+        # attention handles arbitrary D via separate v argument.
+        out = chunked_attention(
+            qq, k, v, causal=causal, q_chunk=cfg.attn_q_chunk, scale=scale
+        )
+        if cache_index is not None:
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    out = out.reshape(b, s, h * m.v_head_dim)
+    return dense_apply(params["wo"], out, quant=cfg.quant, tag="attn_proj"), new_cache

@@ -1,0 +1,41 @@
+"""Rotary position embeddings: full, partial (GLM/StableLM), and
+decoupled-rope helpers for MLA."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(rot_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for a rot_dim-dimensional rotary block."""
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, jnp.float32) / rot_dim))
+
+
+def rotate(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float = 10_000.0,
+    rotary_pct: float = 1.0,
+) -> jax.Array:
+    """Apply RoPE to ``x`` (..., S, H, D) at integer ``positions`` (..., S).
+
+    ``rotary_pct < 1`` rotates only the leading ``pct * D`` dims (GLM's 2D
+    RoPE and StableLM partial rotary), passing the rest through unchanged.
+    """
+    d = x.shape[-1]
+    rot = int(d * rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    inv = rope_frequencies(rot, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]                      # broadcast heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = out.astype(x.dtype)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out

@@ -1,0 +1,498 @@
+"""Model assembly: one init/forward/decode entry point for every family.
+
+Layer stacks are homogeneous and scanned (``lax.scan`` over stacked params):
+HLO size is O(1) in depth, which is what keeps the 512-device dry-run
+compiles tractable.  The hybrid (zamba2) family scans an outer
+(group = ``hybrid_period`` SSM layers + one *shared* attention block) unit so
+the shared weights appear once; the tail layers get their own small scan.
+
+Families:
+  dense  — [norm -> attn -> res] [norm -> ffn -> res] x L
+  moe    —  same, ffn replaced by expert-parallel MoE
+  ssm    — [norm -> mamba2 -> res] x L
+  hybrid — ssm backbone + shared attn/ffn block every ``hybrid_period``
+  vlm    — dense LM consuming [patch embeds ; token embeds]
+  audio  — encoder-only (bidirectional) over stubbed frame embeddings
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import KVCache, attention_apply, attention_init
+from repro.layers.embedding import embed, embedding_init, unembed
+from repro.layers.ffn import ffn_apply, ffn_init
+from repro.layers.mamba2 import SsmCache, mamba2_apply, mamba2_init
+from repro.layers.mla import MlaCache, mla_apply, mla_init
+from repro.layers.moe import moe_apply, moe_init
+from repro.layers.norms import rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HybridCache:
+    """SSM states for every layer + KV cache for the shared-attn instances."""
+
+    ssm: SsmCache
+    kv: KVCache  # stacked over shared-block applications
+
+    @property
+    def index(self):
+        return self.kv.index
+
+
+jax.tree_util.register_dataclass(HybridCache, ["ssm", "kv"], [])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache for a model family (None for encoder-only)."""
+    if cfg.encoder_only:
+        return None
+    if cfg.family in ("dense", "vlm"):
+        if cfg.attention == "mla":
+            return MlaCache.init(cfg, batch, max_len, cfg.num_layers)
+        return KVCache.init(cfg, batch, max_len, cfg.num_layers)
+    if cfg.family == "moe":
+        if cfg.attention == "mla":
+            return MlaCache.init(cfg, batch, max_len, cfg.num_layers)
+        return KVCache.init(cfg, batch, max_len, cfg.num_layers)
+    if cfg.family == "ssm":
+        return SsmCache.init(cfg, batch, cfg.num_layers)
+    if cfg.family == "hybrid":
+        n_shared = cfg.num_layers // cfg.hybrid_period
+        return HybridCache(
+            ssm=SsmCache.init(cfg, batch, cfg.num_layers),
+            kv=KVCache.init(cfg, batch, max_len, n_shared),
+        )
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    """One transformer/ssm block's params (family-dependent)."""
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        return {
+            "norm": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": mamba2_init(ks[0], cfg, dtype),
+        }
+    p = {
+        "attn_norm": rmsnorm_init(cfg.d_model, dtype),
+        "ffn_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.attention == "mla":
+        p["attn"] = mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attention_init(ks[0], cfg, dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, std=cfg.init_std, dtype=dtype, quant=cfg.quant)
+    return p
+
+
+def _shared_block_init(key: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention_init(ks[0], cfg, dtype),
+        "ffn_norm": rmsnorm_init(cfg.d_model, dtype),
+        "ffn": ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, std=cfg.init_std, dtype=dtype, quant=cfg.quant),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Full parameter pytree (usable under ``jax.eval_shape`` for dry-runs)."""
+    dtype = cfg.param_dtype()
+    k_embed, k_layers, k_shared, k_norm = jax.random.split(key, 4)
+
+    p: dict[str, Any] = {
+        "embed": embedding_init(k_embed, cfg.vocab_size, cfg.d_model, std=cfg.init_std, dtype=dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+    if cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.num_layers // period
+        tail = cfg.num_layers - n_groups * period
+        gk = jax.random.split(k_layers, n_groups * period).reshape(n_groups, period, 2)
+        p["layers"] = jax.vmap(
+            jax.vmap(lambda k: _block_init(k, cfg, dtype))
+        )(gk)
+        if tail:
+            tk = jax.random.split(jax.random.fold_in(k_layers, 1), tail)
+            p["tail"] = jax.vmap(lambda k: _block_init(k, cfg, dtype))(tk)
+        p["shared"] = _shared_block_init(k_shared, cfg, dtype)
+    else:
+        lk = jax.random.split(k_layers, cfg.num_layers)
+        p["layers"] = jax.vmap(lambda k: _block_init(k, cfg, dtype))(lk)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attn_block(bp, h, cfg, positions, layer_cache, cache_index, causal, mesh):
+    """attention (+ffn/moe) block with residuals.  Returns (h, cache, aux)."""
+    apply = mla_apply if cfg.attention == "mla" else attention_apply
+    a, new_cache = apply(
+        bp["attn"], rmsnorm(bp["attn_norm"], h, cfg.norm_eps), cfg,
+        positions=positions, layer_cache=layer_cache, cache_index=cache_index,
+        causal=causal,
+    )
+    h = h + a
+    hn = rmsnorm(bp["ffn_norm"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = moe_apply(bp["moe"], hn, cfg, mesh=mesh)
+    else:
+        f, aux = ffn_apply(bp["ffn"], hn, cfg), jnp.zeros((), jnp.float32)
+    return h + f, new_cache, aux
+
+
+def _ssm_block(bp, h, cfg, layer_cache, cache_index):
+    out, new_cache = mamba2_apply(
+        bp["mamba"], rmsnorm(bp["norm"], h, cfg.norm_eps), cfg,
+        layer_cache=layer_cache, cache_index=cache_index,
+    )
+    return h + out, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig, enable: bool):
+    return jax.checkpoint(fn) if (cfg.remat and enable) else fn
+
+
+def _embed_inputs(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    dtype = cfg.param_dtype()
+    if cfg.input_mode == "frames":
+        return batch["frames"].astype(dtype)
+    if cfg.input_mode == "tokens+patches":
+        tok = embed(params["embed"], batch["tokens"], dtype)
+        return jnp.concatenate([batch["patches"].astype(dtype), tok], axis=1)
+    return embed(params["embed"], batch["tokens"], dtype)
+
+
+def forward(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train / eval / prefill-style).
+
+    batch: {"tokens": (B, S)} (+ "patches"/"frames" per input_mode).
+    Returns (logits (B, S_total, V) f32, aux losses scalar).
+    """
+    h = _embed_inputs(params, batch, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    causal = not cfg.encoder_only
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(carry, lp):
+            hh, aux = carry
+            hh, _, a = _attn_block(lp, hh, cfg, positions, None, None, causal, mesh)
+            return (hh, aux + a), None
+
+        (h, aux), _ = jax.lax.scan(
+            _maybe_remat(body, cfg, remat), (h, jnp.zeros((), jnp.float32)),
+            params["layers"],
+        )
+    elif cfg.family == "ssm":
+        def body(hh, lp):
+            hh, _ = _ssm_block(lp, hh, cfg, None, None)
+            return hh, None
+
+        h, _ = jax.lax.scan(_maybe_remat(body, cfg, remat), h, params["layers"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def inner(hh, lp):
+            hh, _ = _ssm_block(lp, hh, cfg, None, None)
+            return hh, None
+
+        def group(hh, glp):
+            hh, _ = jax.lax.scan(inner, hh, glp)
+            hh, _, _ = _attn_block(shared, hh, cfg, positions, None, None, True, mesh)
+            return hh, None
+
+        h, _ = jax.lax.scan(_maybe_remat(group, cfg, remat), h, params["layers"])
+        if "tail" in params:
+            h, _ = jax.lax.scan(_maybe_remat(inner, cfg, remat), h, params["tail"])
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params["embed"], h), aux
+
+
+# ---------------------------------------------------------------------------
+# prefill (inference: seed decode caches, emit last-position logits only)
+# ---------------------------------------------------------------------------
+
+def prefill(
+    params: dict,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+):
+    """Prefill: full-sequence pass that seeds the decode cache.
+
+    Returns (last_logits (B, V) f32, cache with index = S).  Cache buffers
+    are sized to the prompt length; the serving engine right-pads them to its
+    decode budget.  Logits are computed for the *last* position only — a
+    (B, S, V) logits tensor at 32k prompt length would not fit HBM.
+    """
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no prefill/decode")
+    h = _embed_inputs(params, batch, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    idx0 = jnp.zeros((), jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        is_mla = cfg.attention == "mla"
+
+        def body(hh, lp):
+            hh, nc, _ = _attn_block(lp, hh, cfg, positions, None, idx0, True, mesh)
+            return hh, nc
+
+        h, lcs = jax.lax.scan(body, h, params["layers"])
+        if is_mla:
+            cache = MlaCache(lcs["c_kv"], lcs["k_rope"], jnp.int32(s))
+        else:
+            cache = KVCache(lcs["k"], lcs["v"], jnp.int32(s))
+    elif cfg.family == "ssm":
+        def body(hh, lp):
+            hh, nc = _ssm_block(lp, hh, cfg, None, idx0)
+            return hh, nc
+
+        h, lcs = jax.lax.scan(body, h, params["layers"])
+        cache = SsmCache(lcs["h"], lcs["conv_x"], lcs["conv_bc"], jnp.int32(s))
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.num_layers // period
+        shared = params["shared"]
+
+        def inner(hh, lp):
+            hh, nc = _ssm_block(lp, hh, cfg, None, idx0)
+            return hh, nc
+
+        def group(hh, glp):
+            hh, ncs = jax.lax.scan(inner, hh, glp)
+            hh, nkv, _ = _attn_block(shared, hh, cfg, positions, None, idx0, True, mesh)
+            return hh, (ncs, nkv)
+
+        h, (ssm_groups, kvs) = jax.lax.scan(group, h, params["layers"])
+        ssm_flat = jax.tree.map(
+            lambda a: a.reshape(n_groups * period, *a.shape[2:]), ssm_groups
+        )
+        if "tail" in params:
+            h, tail_lcs = jax.lax.scan(inner, h, params["tail"])
+            ssm_flat = jax.tree.map(
+                lambda a, t: jnp.concatenate([a, t], axis=0), ssm_flat, tail_lcs
+            )
+        cache = HybridCache(
+            ssm=SsmCache(
+                ssm_flat["h"], ssm_flat["conv_x"], ssm_flat["conv_bc"], jnp.int32(s)
+            ),
+            kv=KVCache(kvs["k"], kvs["v"], jnp.int32(s)),
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    h = rmsnorm(params["final_norm"], h[:, -1:, :], cfg.norm_eps)
+    return unembed(params["embed"], h)[:, 0, :], cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    params: dict,
+    token: jax.Array,
+    cache,
+    cfg: ModelConfig,
+    *,
+    mesh: Optional[jax.sharding.Mesh] = None,
+):
+    """One decode step.  token: (B,) int32.  Returns (logits (B, V), cache)."""
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    h = embed(params["embed"], token[:, None], cfg.param_dtype())  # (B, 1, d)
+    b = h.shape[0]
+    idx = cache.index
+    positions = jnp.broadcast_to(idx, (b, 1)).astype(jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        # The stacked cache rides the scan CARRY; the layer attends against a
+        # read-only slice plus the current token as an explicit extra column,
+        # then commits the single new position.  (Measured ALTERNATIVE —
+        # commit-before-read so the mask covers the new token — was 1.4x
+        # WORSE: the post-commit slice read materializes a fresh copy.  See
+        # EXPERIMENTS.md §Perf, decode hillclimb, hypothesis log.)
+        is_mla = cfg.attention == "mla"
+        xs = (params["layers"], jnp.arange(cfg.num_layers))
+        if not cfg.decode_cache_carry:
+            # ys-rewrite path: per-layer cache slices flow through scan
+            # xs -> ys (full rewrite per step).  Needed when the cache is
+            # sequence-sharded over 'model' — the carried dynamic write into
+            # the sharded dim degrades under the SPMD partitioner.
+            if is_mla:
+                lxs = (params["layers"],
+                       {"c_kv": cache.c_kv, "k_rope": cache.k_rope})
+            else:
+                lxs = (params["layers"], {"k": cache.k, "v": cache.v})
+
+            def body_ys(hh, x):
+                lp, lc = x
+                hh, nc, _ = _attn_block(lp, hh, cfg, positions, lc, idx, True, mesh)
+                if is_mla:
+                    # MLA layers always return new-position entries
+                    nc = {
+                        "c_kv": jax.lax.dynamic_update_slice(
+                            lc["c_kv"], nc["c_kv"].astype(lc["c_kv"].dtype),
+                            (0, idx, 0)),
+                        "k_rope": jax.lax.dynamic_update_slice(
+                            lc["k_rope"], nc["k_rope"].astype(lc["k_rope"].dtype),
+                            (0, idx, 0)),
+                    }
+                # GQA layers with decode_cache_carry=False already committed
+                # the position and returned the full updated slice.
+                return hh, nc
+
+            h, new_lc = jax.lax.scan(body_ys, h, lxs)
+            if is_mla:
+                new_cache = MlaCache(new_lc["c_kv"], new_lc["k_rope"], idx + 1)
+            else:
+                new_cache = KVCache(new_lc["k"], new_lc["v"], idx + 1)
+        elif is_mla:
+            def body(carry, x):
+                hh, ckv, krp = carry
+                lp, i = x
+                lc = {
+                    "c_kv": jax.lax.dynamic_index_in_dim(ckv, i, 0, False),
+                    "k_rope": jax.lax.dynamic_index_in_dim(krp, i, 0, False),
+                }
+                hh, nc, _ = _attn_block(lp, hh, cfg, positions, lc, idx, True, mesh)
+                ckv = jax.lax.dynamic_update_slice(
+                    ckv, nc["c_kv"][None].astype(ckv.dtype), (i, 0, idx, 0)
+                )
+                krp = jax.lax.dynamic_update_slice(
+                    krp, nc["k_rope"][None].astype(krp.dtype), (i, 0, idx, 0)
+                )
+                return (hh, ckv, krp), None
+
+            (h, ckv, krp), _ = jax.lax.scan(body, (h, cache.c_kv, cache.k_rope), xs)
+            new_cache = MlaCache(ckv, krp, idx + 1)
+        else:
+            def body(carry, x):
+                hh, kc, vc = carry
+                lp, i = x
+                lc = {
+                    "k": jax.lax.dynamic_index_in_dim(kc, i, 0, False),
+                    "v": jax.lax.dynamic_index_in_dim(vc, i, 0, False),
+                }
+                hh, nc, _ = _attn_block(lp, hh, cfg, positions, lc, idx, True, mesh)
+                kc = jax.lax.dynamic_update_slice(
+                    kc, nc["k"][None].astype(kc.dtype), (i, 0, idx, 0, 0)
+                )
+                vc = jax.lax.dynamic_update_slice(
+                    vc, nc["v"][None].astype(vc.dtype), (i, 0, idx, 0, 0)
+                )
+                return (hh, kc, vc), None
+
+            (h, kc, vc), _ = jax.lax.scan(body, (h, cache.k, cache.v), xs)
+            new_cache = KVCache(kc, vc, idx + 1)
+    elif cfg.family == "ssm":
+        def body(hh, x):
+            lp, lc = x
+            hh, nc = _ssm_block(lp, hh, cfg, lc, idx)
+            return hh, nc
+
+        h, new_lc = jax.lax.scan(
+            body, h,
+            (params["layers"],
+             {"h": cache.h, "conv_x": cache.conv_x, "conv_bc": cache.conv_bc}),
+        )
+        new_cache = SsmCache(new_lc["h"], new_lc["conv_x"], new_lc["conv_bc"], idx + 1)
+    elif cfg.family == "hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.num_layers // period
+        shared = params["shared"]
+        ssm_lc = {
+            "h": cache.ssm.h,
+            "conv_x": cache.ssm.conv_x,
+            "conv_bc": cache.ssm.conv_bc,
+        }
+        ssm_parts = jax.tree.map(
+            lambda a: a[: n_groups * period].reshape(
+                n_groups, period, *a.shape[1:]
+            ),
+            ssm_lc,
+        )
+
+        def inner(carry, x):
+            hh = carry
+            lp, lc = x
+            hh, nc = _ssm_block(lp, hh, cfg, lc, idx)
+            return hh, nc
+
+        def group(carry, x):
+            hh, kc, vc = carry
+            glp, glc, g = x
+            hh, ncs = jax.lax.scan(inner, hh, (glp, glc))
+            kv_lc = {
+                "k": jax.lax.dynamic_index_in_dim(kc, g, 0, False),
+                "v": jax.lax.dynamic_index_in_dim(vc, g, 0, False),
+            }
+            hh, nkv, _ = _attn_block(shared, hh, cfg, positions, kv_lc, idx, True, mesh)
+            kc = jax.lax.dynamic_update_slice(
+                kc, nkv["k"][None].astype(kc.dtype), (g, 0, idx, 0, 0)
+            )
+            vc = jax.lax.dynamic_update_slice(
+                vc, nkv["v"][None].astype(vc.dtype), (g, 0, idx, 0, 0)
+            )
+            return (hh, kc, vc), ncs
+
+        (h, kc, vc), new_ssm_groups = jax.lax.scan(
+            group, (h, cache.kv.k, cache.kv.v),
+            (params["layers"], ssm_parts, jnp.arange(n_groups)),
+        )
+        new_ssm = jax.tree.map(
+            lambda a: a.reshape(n_groups * period, *a.shape[2:]), new_ssm_groups
+        )
+        if "tail" in params:
+            tail_lc = jax.tree.map(lambda a: a[n_groups * period :], ssm_lc)
+            h, new_tail = jax.lax.scan(inner, h, (params["tail"], tail_lc))
+            new_ssm = jax.tree.map(
+                lambda a, t: jnp.concatenate([a, t], axis=0), new_ssm, new_tail
+            )
+        new_cache = HybridCache(
+            ssm=SsmCache(
+                new_ssm["h"], new_ssm["conv_x"], new_ssm["conv_bc"], idx + 1
+            ),
+            kv=KVCache(kc, vc, idx + 1),
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h)[:, 0, :]
+    return logits, new_cache

@@ -1,0 +1,102 @@
+"""AdamW in pure JAX (no optax), with bf16-param / f32-state discipline.
+
+State layout per leaf: ``m`` and ``v`` in float32 plus an optional float32
+master copy of the parameter when the parameter itself is stored in bf16
+(mixed-precision training).  The state pytree mirrors the param tree, so the
+parameter PartitionSpecs apply verbatim to every state leaf (sharded
+optimizer states come for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # f32 master params (None leaves when param already f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32   # bf16 moments fit the largest models
+    use_master: bool = True           # f32 master copy of bf16 params
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, self.moment_dtype), params
+        )
+        if self.use_master:
+            master = jax.tree.map(
+                lambda p: p.astype(jnp.float32) if p.dtype != jnp.float32 else p,
+                params,
+            )
+        else:
+            master = jax.tree.map(lambda p: jnp.zeros((0,), jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros), master)
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads: Any, state: AdamWState, params: Any):
+        """Returns (new_params, new_state, metrics)."""
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
+        step = state.step + 1
+        lr = self._lr(step)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def leaf(g, m, v, master, p):
+            g = g.astype(jnp.float32) * scale
+            mf = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            vf = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * jnp.square(g)
+            upd = (mf / b1c) / (jnp.sqrt(vf / b2c) + self.eps)
+            ref = master if self.use_master else p.astype(jnp.float32)
+            new_ref = ref - lr * (upd + self.weight_decay * ref)
+            new_master = new_ref if self.use_master else master
+            return (
+                new_ref.astype(p.dtype),
+                mf.astype(self.moment_dtype),
+                vf.astype(self.moment_dtype),
+                new_master,
+            )
+
+        is_tup = lambda x: isinstance(x, tuple)  # noqa: E731
+        out = jax.tree.map(leaf, grads, state.m, state.v, state.master, params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_tup)
+        new_master = jax.tree.map(lambda t: t[3], out, is_leaf=is_tup)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step, new_m, new_v, new_master), metrics
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn

@@ -1,0 +1,65 @@
+"""Error-feedback gradient compression for cross-pod all-reduce.
+
+At 1000+ nodes the pod-crossing links are the scarcest resource; the standard
+mitigation is compressed gradient exchange with error feedback (EF-SGD /
+1-bit Adam lineage):
+
+    e_{t}   : residual carried per leaf
+    c_t     = C(g_t + e_t)           # compress
+    e_{t+1} = (g_t + e_t) - D(c_t)   # new residual
+    exchange c_t, apply D(c_t)
+
+Compressors:
+  * ``sign``  — 1-bit sign with per-leaf L1 scale (32x smaller);
+  * ``int8``  — linear quantization with per-leaf absmax scale (4x);
+  * ``topk``  — magnitude top-k% sparsification (k/100 x).
+
+All pure functions over pytrees — unit-tested for the EF contract
+(compression error is carried, long-run mean update is unbiased).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    kind: str = "sign"        # sign | int8 | topk | none
+    topk_frac: float = 0.01
+
+    def init_error(self, params: Any) -> Any:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress_decompress(self, grads: Any, error: Any):
+        """-> (decompressed grads to exchange/apply, new error, bits ratio)."""
+        if self.kind == "none":
+            return grads, error, 1.0
+
+        def leaf(g, e):
+            gf = g.astype(jnp.float32) + e
+            if self.kind == "sign":
+                scale = jnp.mean(jnp.abs(gf))
+                dec = jnp.sign(gf) * scale
+            elif self.kind == "int8":
+                amax = jnp.max(jnp.abs(gf)) + 1e-12
+                q = jnp.clip(jnp.round(gf / amax * 127.0), -127, 127)
+                dec = q * (amax / 127.0)
+            elif self.kind == "topk":
+                k = max(1, int(gf.size * self.topk_frac))
+                flat = gf.reshape(-1)
+                thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+                dec = jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(gf.shape)
+            else:
+                raise ValueError(self.kind)
+            return dec, gf - dec
+
+        out = jax.tree.map(leaf, grads, error)
+        is_tup = lambda x: isinstance(x, tuple)  # noqa: E731
+        dec = jax.tree.map(lambda t: t[0], out, is_leaf=is_tup)
+        err = jax.tree.map(lambda t: t[1], out, is_leaf=is_tup)
+        ratio = {"sign": 1 / 32, "int8": 1 / 4, "topk": self.topk_frac}[self.kind]
+        return dec, err, ratio

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (per chip) used by the roofline analysis."""
+
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_LINK_BW = 50e9             # bytes/s per link (≈ per-chip injection for
+                               # ring collectives on one axis)
+HBM_BYTES = 16 * 2 ** 30       # 16 GiB capacity

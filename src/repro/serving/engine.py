@@ -1,0 +1,171 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching.
+
+The engine keeps ``max_batch`` decode slots.  Requests are prefilled (cache
+seeded at prompt length, right-padded to the decode budget) and inserted
+into free slots; every engine step decodes ALL active slots in one batched
+``decode_step`` call; finished sequences (EOS or length budget) free their
+slot for the next queued request.  This is the N2Net deployment shape: a
+stream of "packets" (requests) classified/extended at a fixed batched rate.
+
+Single-cache-per-slot variant: the batched cache is a pytree whose batch dim
+is the slot axis; prefill writes a slot by dynamic_update on that axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        max_len: int = 256,
+        mesh=None,
+        sampler: Optional[Callable] = None,
+    ):
+        if cfg.encoder_only:
+            raise ValueError("encoder-only architectures cannot be served")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.mesh = mesh
+        self.sampler = sampler or (lambda logits: jnp.argmax(logits, axis=-1))
+
+        self.cache = init_cache(cfg, max_batch, max_len)
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)       # next write index
+        self.slot_budget = np.zeros(max_batch, np.int32)
+        self.last_token = np.zeros(max_batch, np.int32)
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, t, c, cfg, mesh=mesh)
+        )
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg, mesh=mesh)
+        )
+
+    # -- API -------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Process until queue + slots drain (or step budget)."""
+        for _ in range(max_steps):
+            self._admit()
+            if not any(s is not None for s in self.slots):
+                if not self.queue:
+                    break
+                continue
+            self._step()
+        return self.completed
+
+    # -- internals ---------------------------------------------------------
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            s = len(req.prompt)
+            logits, pcache = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None, :])}
+            )
+            tok = int(np.asarray(self.sampler(logits))[0])
+            req.output.append(tok)
+            # EOS / budget may already hit on the prefill-sampled token
+            if (req.eos_id is not None and tok == req.eos_id) or req.max_new_tokens <= 1:
+                req.done = True
+                self.completed.append(req)
+                continue
+            self._install(slot, pcache, s)
+            self.slots[slot] = req
+            self.slot_pos[slot] = s
+            self.slot_budget[slot] = req.max_new_tokens - 1
+            self.last_token[slot] = tok
+
+    def _install(self, slot: int, pcache, prompt_len: int) -> None:
+        """Copy a prefilled (batch=1, len=S) cache into the slot axis of the
+        batched cache, right-padding the sequence axis to max_len."""
+
+        def put(dst, src):
+            if src.ndim == 0:
+                return dst
+            # src: (L, 1, S, ...) or (L, 1, ...); dst: (L, B, max_len, ...)
+            pad = [(0, 0)] * src.ndim
+            if src.ndim >= 3 and dst.shape[2] != src.shape[2]:
+                pad[2] = (0, dst.shape[2] - src.shape[2])
+                src = jnp.pad(src, pad)
+            idx = (slice(None), slice(slot, slot + 1))
+            return dst.at[idx].set(src.astype(dst.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, pcache)
+        # index field lives per-cache (scalar): decode uses per-slot positions
+        # via the max — single-sequence engines keep them aligned; mixed-length
+        # slots decode against the padded region masked by position index.
+        self.cache = _set_index(self.cache, int(max(self.slot_pos.max(), prompt_len)))
+
+    def _step(self) -> None:
+        tokens = jnp.asarray(self.last_token)
+        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        next_tok = np.asarray(self.sampler(logits))
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(next_tok[slot])
+            req.output.append(tok)
+            self.slot_pos[slot] += 1
+            self.slot_budget[slot] -= 1
+            if (req.eos_id is not None and tok == req.eos_id) or (
+                self.slot_budget[slot] <= 0
+                or self.slot_pos[slot] >= self.max_len - 1
+            ):
+                req.done = True
+                self.completed.append(req)
+                self.slots[slot] = None
+
+
+def _set_index(cache, value: int):
+    import dataclasses as dc
+
+    def fix(obj):
+        if hasattr(obj, "index") and dc.is_dataclass(obj):
+            kw = {}
+            for f in dc.fields(obj):
+                v = getattr(obj, f.name)
+                if f.name == "index":
+                    kw[f.name] = jnp.asarray(value, jnp.int32)
+                elif dc.is_dataclass(v):
+                    kw[f.name] = fix(v)
+                else:
+                    kw[f.name] = v
+            return dc.replace(obj, **kw)
+        return obj
+
+    return fix(cache)

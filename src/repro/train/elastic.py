@@ -1,0 +1,59 @@
+"""Elastic scaling: resume a run on a different device extent.
+
+The checkpoint stores full (unsharded-on-disk) leaves, so elasticity is a
+resharding problem: build the new mesh, recompute PartitionSpecs against it
+(the rule table drops axes that no longer divide), and device_put the
+restored tree.  The data pipeline is (seed, step)-deterministic and
+global-batch-defined, so changing the number of data shards changes only
+which host materializes which rows — the training trajectory is preserved.
+
+``rescale`` is exercised by tests at toy scale (1 device -> 1 device with a
+different logical mesh); on real fleets the same path handles pod loss
+(shrink ``data``) and pod join (grow ``data``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro import sharding
+from repro.configs.base import ModelConfig
+from repro.train import checkpoint as ckpt
+
+
+def rescale(
+    cfg: ModelConfig,
+    directory: str,
+    like: Any,
+    new_mesh: jax.sharding.Mesh,
+) -> Optional[tuple]:
+    """Restore the latest checkpoint and reshard it onto ``new_mesh``.
+
+    -> (bundle_on_new_mesh, step, extras) or None if no valid checkpoint.
+    """
+    got = ckpt.restore_latest(directory, like)
+    if got is None:
+        return None
+    bundle, step, extras = got
+
+    pspecs = sharding.param_specs(cfg, bundle["params"], new_mesh)
+    named = sharding.to_named(pspecs, new_mesh)
+    params = jax.device_put(bundle["params"], named)
+
+    # optimizer state mirrors param specs (placeholder leaves replicate)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def opt_leaf(spec, leaf):
+        if getattr(leaf, "ndim", 0) <= 1 and getattr(leaf, "shape", ()) in ((), (0,)):
+            return jax.device_put(leaf, NamedSharding(new_mesh, P()))
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+
+    opt = bundle["opt"]
+    new_opt = type(opt)(
+        step=jax.device_put(opt.step, NamedSharding(new_mesh, P())),
+        m=jax.tree.map(opt_leaf, pspecs, opt.m),
+        v=jax.tree.map(opt_leaf, pspecs, opt.v),
+        master=jax.tree.map(opt_leaf, pspecs, opt.master),
+    )
+    return {"params": params, "opt": new_opt}, step, extras

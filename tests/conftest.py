@@ -1,0 +1,65 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+
+
+def tiny_config(name: str, **kw):
+    """Reduced config of the same family — the per-arch smoke recipe."""
+    cfg = get_config(name)
+    base = dict(
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=97, max_seq_len=128, attn_q_chunk=16,
+        microbatches=1, fsdp=False,
+    )
+    if cfg.ssm is not None:
+        base["ssm"] = dataclasses.replace(
+            cfg.ssm, state_dim=16, head_dim=16, chunk=8
+        )
+    if cfg.moe is not None:
+        base["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=2, expert_ffn_dim=32,
+            capacity_factor=2.0,
+        )
+    if cfg.mla is not None:
+        base["mla"] = dataclasses.replace(
+            cfg.mla, kv_lora_rank=32, q_lora_rank=48, qk_nope_dim=16,
+            qk_rope_dim=8, v_head_dim=16,
+        )
+    if cfg.family == "hybrid":
+        base["hybrid_period"] = 2
+    if cfg.family == "vlm":
+        base["num_patches"] = 8
+    base.update(kw)
+    return dataclasses.replace(cfg, **base)
+
+
+@pytest.fixture
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, batch: int, seq: int, key):
+    """Random input batch matching the arch's input mode."""
+    import jax.numpy as jnp
+
+    kt, kp, kl = jax.random.split(key, 3)
+    labels = jax.random.randint(kl, (batch, seq), 0, cfg.vocab_size)
+    if cfg.input_mode == "frames":
+        return {
+            "frames": jax.random.normal(kt, (batch, seq, cfg.d_model)),
+            "labels": labels,
+        }
+    if cfg.input_mode == "tokens+patches":
+        st = seq - cfg.num_patches
+        return {
+            "tokens": jax.random.randint(kt, (batch, st), 0, cfg.vocab_size),
+            "patches": jax.random.normal(kp, (batch, cfg.num_patches, cfg.d_model)),
+            "labels": labels[:, :st],
+        }
+    return {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size),
+        "labels": labels,
+    }

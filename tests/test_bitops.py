@@ -1,0 +1,60 @@
+"""Property tests for the chip-legal bit primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+def test_hakmem_popcount_matches_native(words):
+    x = jnp.asarray(np.array(words, np.uint32))
+    got = bitops.hakmem_popcount(x)
+    want = jax.lax.population_count(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    st.integers(1, 5).flatmap(
+        lambda w: st.lists(
+            st.lists(st.integers(0, 1), min_size=32 * w, max_size=32 * w),
+            min_size=1, max_size=4,
+        )
+    )
+)
+def test_pack_unpack_roundtrip(rows):
+    bits = jnp.asarray(np.array(rows, np.int64))
+    packed = bitops.pack_bits(bits)
+    back = bitops.unpack_bits(packed, count=bits.shape[-1])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(bits))
+
+
+@given(st.integers(2, 200), st.integers(0, 2**31))
+def test_packed_dot_matches_pm1_dot(n_bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, n_bits)
+    w = rng.integers(0, 2, n_bits)
+    want = int(((2 * x - 1) * (2 * w - 1)).sum())
+    xp = bitops.pack_bits(bitops.pad_to_word_multiple(jnp.asarray(x)))
+    wp = bitops.pack_bits(bitops.pad_to_word_multiple(jnp.asarray(w)))
+    got = int(bitops.packed_dot(xp, wp, n_bits))
+    assert got == want
+
+
+def test_sign_conventions():
+    x = jnp.array([-2.0, -0.0, 0.0, 3.0])
+    np.testing.assert_array_equal(
+        np.asarray(bitops.sign_to_bits(x)), [0, 1, 1, 1]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(bitops.bits_to_sign(jnp.array([0, 1]))), [-1.0, 1.0]
+    )
+
+
+def test_pad_to_word_multiple_noop_on_aligned():
+    x = jnp.ones((3, 64), jnp.int32)
+    assert bitops.pad_to_word_multiple(x) is x

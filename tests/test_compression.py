@@ -1,0 +1,53 @@
+"""Error-feedback compression contract tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.compression import Compressor
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("kind", ["sign", "int8", "topk"])
+def test_ef_identity(kind):
+    """dec + new_err == g + old_err exactly (nothing lost, only deferred)."""
+    c = Compressor(kind=kind)
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+    e = {"w": jax.random.normal(jax.random.PRNGKey(1), (64,)) * 0.1}
+    dec, err, ratio = c.compress_decompress(g, e)
+    np.testing.assert_allclose(
+        np.asarray(dec["w"] + err["w"]),
+        np.asarray(g["w"] + e["w"]),
+        rtol=1e-5, atol=1e-6,
+    )
+    assert 0 < ratio <= 1
+
+
+@given(st.integers(0, 1000))
+def test_ef_long_run_unbiased(seed):
+    """Accumulated applied updates track accumulated true gradients."""
+    c = Compressor(kind="sign")
+    rng = np.random.default_rng(seed)
+    e = {"w": jnp.zeros((32,))}
+    total_g = np.zeros(32)
+    total_dec = np.zeros(32)
+    for t in range(30):
+        g = {"w": jnp.asarray(rng.standard_normal(32) * 0.1 + 0.05)}
+        dec, e, _ = c.compress_decompress(g, e)
+        total_g += np.asarray(g["w"])
+        total_dec += np.asarray(dec["w"])
+    # residual is bounded -> totals differ by at most the final error
+    np.testing.assert_allclose(
+        total_dec + np.asarray(e["w"]), total_g, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_none_passthrough():
+    c = Compressor(kind="none")
+    g = {"w": jnp.ones((4,))}
+    dec, err, ratio = c.compress_decompress(g, c.init_error(g))
+    np.testing.assert_array_equal(np.asarray(dec["w"]), np.ones(4))
+    assert ratio == 1.0

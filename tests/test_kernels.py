@@ -1,0 +1,112 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+interpret=True (CPU), plus STE gradient behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.bitpack import bitpack
+from repro.kernels.bnn_matmul import bnn_matmul_packed
+from repro.kernels.bnn_matmul_mxu import bnn_matmul_mxu
+
+SHAPES = [(8, 16, 64), (128, 128, 256), (37, 50, 100), (64, 96, 513), (4, 4, 32)]
+IMPLS = ["ref", "packed_ref", "pallas_packed", "pallas_mxu"]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("impl", IMPLS)
+def test_binary_matmul_impl_exact(shape, impl):
+    m, n, k = shape
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 7 + n * 3 + k))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (n, k), jnp.float32)
+    want = ref.bnn_matmul_ref(x, w)
+    got = ops.binary_matmul(x, w, implementation=impl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_binary_matmul_dtypes(dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (32, 64), dtype)
+    w = jax.random.normal(kw, (16, 64), dtype)
+    want = ref.bnn_matmul_ref(x, w)
+    for impl in IMPLS:
+        got = ops.binary_matmul(x, w, implementation=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_packed_kernel_direct_blocks():
+    """Aligned case straight through pl.pallas_call (no padding wrapper)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    m, n, k = 128, 128, 1024
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (n, k))
+    xp, _ = ops.pack_weights(x)
+    wp, _ = ops.pack_weights(w)
+    got = bnn_matmul_packed(
+        xp, wp, k_bits=k, block_m=64, block_n=64, block_kw=8, interpret=True
+    )
+    want = ref.bnn_matmul_packed_ref(xp, wp, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mxu_kernel_direct_blocks():
+    kx, kw = jax.random.split(jax.random.PRNGKey(2))
+    m, n, k = 128, 128, 512
+    x = jax.random.normal(kx, (m, k))
+    w = jnp.where(jax.random.normal(kw, (k, n)) >= 0, 1.0, -1.0).astype(jnp.bfloat16)
+    got = bnn_matmul_mxu(
+        x, w, block_m=64, block_n=64, block_k=128, interpret=True
+    )
+    want = ref.bnn_matmul_mxu_ref(x, w.T)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (64, 256), (256, 512)])
+def test_bitpack_kernel(shape):
+    x = jax.random.normal(jax.random.PRNGKey(3), shape)
+    got = bitpack(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.bitpack_ref(x)))
+
+
+def test_ste_sign_gradient():
+    v = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    g = jax.grad(lambda x: (ops.ste_sign(x) * jnp.arange(5.0)).sum())(v)
+    # pass-through inside |v|<=1, clipped outside
+    np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 2.0, 3.0, 0.0])
+
+
+def test_binary_dense_train_infer_parity():
+    kx, kw = jax.random.split(jax.random.PRNGKey(4))
+    x = jax.random.normal(kx, (8, 64))
+    w = jax.random.normal(kw, (16, 64)) * 0.5
+    for scale in ("weight_only", "xnor", "none"):
+        yt = ops.binary_dense_train(x, w, scale=scale)
+        yi = ops.binary_dense_infer(x, w, scale=scale, implementation="packed_ref")
+        np.testing.assert_allclose(np.asarray(yt), np.asarray(yi), atol=1e-4)
+
+
+def test_binary_dense_grads_flow():
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(kx, (8, 64))
+    w = jax.random.normal(kw, (16, 64)) * 0.5
+    gx, gw = jax.grad(
+        lambda xx, ww: ops.binary_dense_train(xx, ww, scale="xnor").sum(),
+        argnums=(0, 1),
+    )(x, w)
+    assert bool(jnp.isfinite(gx).all()) and bool(jnp.isfinite(gw).all())
+    assert float(jnp.abs(gw).sum()) > 0
+
+
+def test_pack_weights_padding_correction():
+    """K not a multiple of 32: zero pad bits must cancel exactly."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(6))
+    for k in (33, 63, 100, 511):
+        x = jax.random.normal(kx, (4, k))
+        w = jax.random.normal(kw, (8, k))
+        got = ops.binary_matmul(x, w, implementation="packed_ref")
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.bnn_matmul_ref(x, w)), atol=1e-5
+        )

@@ -1,0 +1,21 @@
+import jax
+import numpy as np
+
+from repro.core import bnn, compile_bnn
+from repro.core.p4gen import generate_p4
+
+
+def test_p4_structure():
+    params = bnn.init_params(bnn.BnnSpec((32, 16, 4)), jax.random.PRNGKey(0))
+    prog = compile_bnn([np.asarray(w) for w in params])
+    src = generate_p4(prog)
+    assert src.count("action element_") == prog.num_elements
+    # every element invoked exactly once, in order
+    apply_block = src.split("apply {")[1]
+    for i in range(prog.num_elements):
+        assert f"element_{i}_" in apply_block
+    # header declares the I/O fields
+    for f in prog.input_fields + prog.output_fields:
+        assert f"f{f.fid};" in src
+    # only chip-legal constructs
+    assert "float" not in src

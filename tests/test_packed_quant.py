@@ -1,0 +1,68 @@
+"""The paper's technique in serving form: packed XNOR-popcount projections."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny_config
+from repro.configs.base import QuantConfig
+from repro.kernels import ref
+from repro.layers.linear import dense_apply, dense_init
+from repro.models import decode_step, forward, init_cache, init_params
+
+PACKED = QuantConfig(mode="bnn_packed", targets=("ffn", "attn_proj"))
+
+
+@pytest.mark.parametrize("k", [32, 64, 100, 513])
+def test_packed_dense_matches_oracle(k):
+    key = jax.random.PRNGKey(k)
+    p = dense_init(key, k, 48, quant=PACKED, tag="ffn")
+    assert "w_packed" in p and p["w_packed"].dtype == jnp.uint32
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, k))
+    y = dense_apply(p, x)
+    # the same key reproduces the latent weights the packing came from
+    w_lat = jax.random.normal(key, (48, k)) * 0.02
+    want = (
+        ref.bnn_matmul_ref(x, w_lat)
+        * p["alpha"][None, :]
+        * jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_packed_weights_are_16x_smaller():
+    p_packed = dense_init(jax.random.PRNGKey(0), 1024, 512, quant=PACKED, tag="ffn")
+    p_dense = dense_init(jax.random.PRNGKey(0), 1024, 512, dtype=jnp.bfloat16)
+    packed_bytes = p_packed["w_packed"].size * 4 + p_packed["alpha"].size * 4
+    dense_bytes = p_dense["w"].size * 2
+    assert dense_bytes / packed_bytes > 15
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "qwen3-moe-30b-a3b", "mamba2-1.3b"])
+def test_packed_model_forward_and_decode(arch, rng_key):
+    targets = ("ffn", "attn_proj", "moe", "ssm_proj")
+    cfg = tiny_config(arch, quant=QuantConfig(mode="bnn_packed", targets=targets))
+    params = init_params(cfg, rng_key)
+    batch = make_batch(cfg, 2, 32, rng_key)
+    logits, _ = jax.jit(lambda p, b: forward(p, b, cfg))(params, batch)
+    assert bool(jnp.isfinite(logits).all())
+    cache = init_cache(cfg, 2, 48)
+    lg, c2 = jax.jit(lambda p, t, c: decode_step(p, t, c, cfg))(
+        params, jnp.array([1, 2]), cache
+    )
+    assert bool(jnp.isfinite(lg).all()) and int(c2.index) == 1
+
+
+def test_packed_moe_mm_matches_dense():
+    from repro.layers.moe import _pack_experts, _packed_expert_mm
+
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (4, 16, 64)) * 0.1      # (E, O, K)
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 5, 64))
+    pw, alpha = _pack_experts(w)
+    got = _packed_expert_mm(x, {"packed": pw, "alpha": alpha})
+    ws = jnp.where(w >= 0, 1.0, -1.0)
+    beta = jnp.mean(jnp.abs(x), axis=-1, keepdims=True)
+    xs = jnp.where(x >= 0, 1.0, -1.0)
+    want = jnp.einsum("ecd,efd->ecf", xs, ws) * alpha[:, None, :] * beta
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,115 @@
+"""Sharding rule-table unit tests on a fake 16x16 (and 2x16x16) mesh —
+``param_specs``/``cache_specs`` only read ``mesh.shape``/``axis_names``."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import tiny_config
+from repro import sharding
+from repro.configs import get_config
+from repro.configs.archs import ASSIGNED_ARCHS
+from repro.models import init_cache, init_params
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    shape: dict
+    axis_names: tuple
+
+
+POD = FakeMesh({"data": 16, "model": 16}, ("data", "model"))
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16}, ("pod", "data", "model"))
+
+
+def _axis_size(mesh, ax):
+    return int(np.prod([mesh.shape[a] for a in ((ax,) if isinstance(ax, str) else ax)]))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh", [POD, MULTI], ids=["pod", "multipod"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sharding.param_specs(cfg, params, mesh)
+
+    def check(path, leaf, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            size = _axis_size(mesh, ax)
+            assert leaf.shape[dim] % size == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), params, specs
+    )
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_big_weights_are_sharded(arch):
+    """No >64MB parameter may stay fully replicated on the pod mesh —
+    EXCEPT embedding tables with model-indivisible vocabs, which replicate
+    by measured policy (d_model-sharding them turns the unembed into a TP
+    matmul whose (B,S,V) all-reduce costs more than the replicated bytes;
+    see EXPERIMENTS.md §Perf cross-cutting findings)."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sharding.param_specs(cfg, params, POD)
+    offenders = []
+
+    def check(path, leaf, spec):
+        ps = sharding._path_str(path)
+        if ps.endswith("embed/table") and leaf.shape[0] % POD.shape["model"]:
+            return  # measured exemption (odd vocab)
+        nbytes = int(np.prod(leaf.shape)) * 2
+        if nbytes > 64 * 2**20 and all(ax is None for ax in spec):
+            offenders.append((ps, leaf.shape))
+
+    jax.tree_util.tree_map_with_path(lambda p, l, s: check(p, l, s), params, specs)
+    assert not offenders, offenders
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS if a != "hubert-xlarge"])
+def test_cache_specs_bound_memory(arch):
+    """Decode caches at 32k/batch-128 must not replicate >2GiB per device."""
+    cfg = get_config(arch)
+    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 32768))
+    specs = sharding.cache_specs(cfg, cache, POD)
+    total = 0.0
+
+    def add(leaf, spec):
+        nonlocal total
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        denom = 1
+        for dim, ax in enumerate(spec):
+            if ax is not None:
+                denom *= _axis_size(POD, ax)
+        total += n / denom
+
+    jax.tree_util.tree_map(add, cache, specs)
+    assert total < 8 * 2**30, f"{arch}: per-device cache {total/2**30:.1f} GiB"
+
+
+def test_fsdp_adds_data_axis():
+    cfg = get_config("deepseek-v2-236b")
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sharding.param_specs(cfg, params, POD)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    expert_specs = [
+        s for p, s in flat if "moe/w_gate" in sharding._path_str(p)
+    ]
+    assert expert_specs and all("data" in str(s) for s in expert_specs)
+
+
+def test_batch_specs_skip_indivisible():
+    cfg = tiny_config("phi3-mini-3.8b")
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((1, 64), jax.numpy.int32),  # batch 1
+    }
+    specs = sharding.batch_specs(cfg, batch, POD)
+    assert specs["tokens"] == P(None, None)
+    batch = {"tokens": jax.ShapeDtypeStruct((32, 64), jax.numpy.int32)}
+    specs = sharding.batch_specs(cfg, batch, POD)
+    assert specs["tokens"][0] in ("data", ("data",))
