@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV:
   * popcnt_ablation   — §3 native-POPCNT ablation (12-25 -> 5-10 elements)
   * kernel_bench      — binary-GEMM kernel paths
   * roofline_summary  — dry-run roofline table (EXPERIMENTS.md §Roofline)
+  * dataplane_bench   — fused op-table executor vs legacy interpreter vs
+                        analytic ASIC model, per traffic scenario
+                        (DATAPLANE_BENCH_PACKETS tunes the workload)
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        dataplane_bench,
         kernel_bench,
         popcnt_ablation,
         roofline_summary,
@@ -28,6 +32,7 @@ def main() -> None:
         popcnt_ablation,
         kernel_bench,
         roofline_summary,
+        dataplane_bench,
     ]
     failures = 0
     for mod in modules:

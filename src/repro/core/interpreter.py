@@ -81,15 +81,18 @@ def _run(prog: PipelineProgram, packets: jax.Array) -> jax.Array:
     return jnp.concatenate(outs, axis=1)
 
 
-_RUNNER_CACHE: dict[int, object] = {}
+_RUNNER_CACHE: dict[str, object] = {}
 
 
 def _compiled_runner(prog: PipelineProgram):
-    # Programs are mutable dataclasses; cache per-object identity.
-    fn = _RUNNER_CACHE.get(id(prog))
+    # Keyed on the structural fingerprint, not id(prog): ids are reused after
+    # GC, which could silently hand back a stale runner jitted for a *different*
+    # program.  Fingerprints also dedupe identical recompilations.
+    key = prog.fingerprint()
+    fn = _RUNNER_CACHE.get(key)
     if fn is None:
         fn = jax.jit(functools.partial(_run, prog))
-        _RUNNER_CACHE[id(prog)] = fn
+        _RUNNER_CACHE[key] = fn
     return fn
 
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 import math
 from typing import Sequence
 
@@ -108,9 +109,16 @@ class LayerPlan:
     element_range: tuple[int, int]  # [start, end) indices into program.elements
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)  # identity eq/hash: programs are cache keys
 class PipelineProgram:
-    """A compiled N2Net program: a straight-line sequence of elements."""
+    """A compiled N2Net program: a straight-line sequence of elements.
+
+    Programs are built by the compiler and treated as **structurally
+    immutable** from the first time they are fingerprinted, executed, or
+    lowered — the fingerprint is memoized then, and the jit/lowering caches
+    it keys would go stale under later mutation.  Mutate freely only before
+    first use.
+    """
 
     chip: ChipSpec
     elements: list[Element]
@@ -130,6 +138,60 @@ class PipelineProgram:
     def passes(self) -> int:
         """Pipeline passes (recirculations) needed on a 32-element chip."""
         return max(1, math.ceil(self.num_elements / self.chip.num_elements))
+
+    def fingerprint(self) -> str:
+        """Structural content hash of the program.
+
+        Two programs with identical execution semantics (same ops over the
+        same fields, same I/O layout, same chip) share a fingerprint even if
+        they are distinct Python objects.  Used to key jit/lowering caches —
+        unlike ``id()``, a fingerprint can never alias a dead program's key,
+        and recompiling an identical program hits the cache.  Memoized on
+        first call (O(num_ops) once, O(1) on the hot dispatch path); see the
+        class docstring for the resulting immutability contract.
+        """
+        memo = self.__dict__.get("_fingerprint_memo")
+        if memo is not None:
+            return memo
+        h = hashlib.blake2b(digest_size=16)
+
+        def put(*items) -> None:
+            h.update(repr(items).encode())
+
+        put(
+            self.chip.phv_bits,
+            self.chip.num_elements,
+            self.chip.max_parallel_ops,
+            self.chip.native_popcnt,
+            self.num_fields,
+            self.input_bits,
+            self.output_bits,
+        )
+        put(tuple((f.fid, f.width) for f in self.input_fields))
+        put(tuple((f.fid, f.width) for f in self.output_fields))
+        for el in self.elements:
+            for op in el.ops:
+                put(
+                    op.opcode.value,
+                    op.dst.fid,
+                    op.dst.width,
+                    tuple(s.fid for s in op.srcs),
+                    op.imm,
+                )
+            put("|")  # element boundary
+        memo = h.hexdigest()
+        self.__dict__["_fingerprint_memo"] = memo
+        return memo
+
+    def lower(self, compact: bool = True):
+        """Lower to a dense op-table for the fused dataplane executor.
+
+        Returns a :class:`repro.dataplane.lowering.LoweredProgram`.  Imported
+        lazily so ``core`` stays dependency-free of the dataplane subsystem.
+        """
+        from repro.dataplane.lowering import lower_program
+
+        return lower_program(self, compact=compact)
 
     def validate(self) -> None:
         for el in self.elements:

@@ -1,0 +1,36 @@
+"""``repro.dataplane`` — the switch fleet in software.
+
+Line-rate simulation layer over the N2Net core: programs are lowered to
+dense op-tables (``lowering``), executed fused and batched (``executor``,
+with a Pallas kernel in ``kernels.optable_exec``), fed from a traffic
+scenario library (``traffic``), and scaled past one chip's element budget by
+a simulated multi-switch fabric with per-stage telemetry (``fabric``,
+``telemetry``).
+"""
+from repro.dataplane import executor, fabric, lowering, telemetry, traffic
+from repro.dataplane.executor import DEFAULT_CHUNK, execute, execute_stream
+from repro.dataplane.fabric import MODES, SwitchFabric
+from repro.dataplane.lowering import LoweredProgram, lower_program
+from repro.dataplane.telemetry import FabricTelemetry, stage_telemetry
+from repro.dataplane.traffic import SCENARIOS, generate, get_scenario, stream
+
+__all__ = [
+    "DEFAULT_CHUNK",
+    "FabricTelemetry",
+    "LoweredProgram",
+    "MODES",
+    "SCENARIOS",
+    "SwitchFabric",
+    "execute",
+    "execute_stream",
+    "executor",
+    "fabric",
+    "generate",
+    "get_scenario",
+    "lower_program",
+    "lowering",
+    "stage_telemetry",
+    "stream",
+    "telemetry",
+    "traffic",
+]

@@ -1,0 +1,223 @@
+"""Multi-switch fabric: run programs that exceed one chip's element budget.
+
+A compiled program with more elements than ``ChipSpec.num_elements`` cannot
+execute in one pipeline pass.  The paper's answer is recirculation (the
+packet re-enters the same switch, halving throughput per extra pass); the
+scale-out answer from the follow-on literature is a *chain* of switches, each
+executing a contiguous slice of the program at full line rate, with the PHV
+carried hop to hop in the packet itself.  This module simulates both:
+
+* ``mode="recirculate"`` — one switch, ``ceil(E / num_elements)`` passes;
+  analytic throughput divides by the pass count.
+* ``mode="multi_hop"``   — one switch per slice; every switch forwards at
+  line rate, so throughput stays at the chip rate and only latency grows.
+
+Both modes execute identically bit-for-bit (the register file is the wire
+format between hops); they differ in the telemetry/throughput accounting —
+which is exactly the trade the paper's §2 discussion is about.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import ChipSpec, PipelineProgram
+from repro.core.throughput import report_for_program
+from repro.dataplane import executor as _executor
+from repro.dataplane import telemetry as _telemetry
+from repro.dataplane.lowering import LoweredProgram, lower_program
+
+MODES = ("recirculate", "multi_hop")
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchHop:
+    """One simulated switch (or one recirculation pass) in the chain."""
+
+    index: int
+    element_range: tuple[int, int]
+    lowered: LoweredProgram      # table slice for this hop's elements
+
+
+@dataclasses.dataclass
+class FabricRunResult:
+    outputs: np.ndarray          # (n, output_bits) int32
+    packets: int
+    seconds: float
+    hop_seconds: list[float]
+
+    @property
+    def packets_per_second(self) -> float:
+        return self.packets / self.seconds if self.seconds > 0 else float("inf")
+
+
+class SwitchFabric:
+    """A chain of simulated switches jointly executing one program."""
+
+    def __init__(
+        self,
+        prog: PipelineProgram,
+        hops: Sequence[SwitchHop],
+        lowered: LoweredProgram,
+        mode: str,
+        chip: ChipSpec,
+    ):
+        self.program = prog
+        self.hops = list(hops)
+        self.lowered = lowered
+        self.mode = mode
+        self.chip = chip
+        self._last_run: FabricRunResult | None = None
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def partition(
+        cls,
+        prog: PipelineProgram,
+        *,
+        mode: str = "multi_hop",
+        chip: ChipSpec | None = None,
+        compact: bool = True,
+    ) -> "SwitchFabric":
+        """Slice ``prog`` into per-switch element ranges of at most
+        ``chip.num_elements`` each.  ``chip`` defaults to the program's own
+        target (pass a smaller one to force partitioning in tests)."""
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        chip = chip or prog.chip
+        lowered = lower_program(prog, compact=compact)
+        per_hop = chip.num_elements
+        if per_hop < 1:
+            raise ValueError("chip must have at least one element")
+        hops = []
+        for i, start in enumerate(range(0, lowered.num_elements, per_hop)):
+            stop = min(start + per_hop, lowered.num_elements)
+            hops.append(
+                SwitchHop(
+                    index=i,
+                    element_range=(start, stop),
+                    lowered=lowered.slice_elements(start, stop),
+                )
+            )
+        return cls(prog, hops, lowered, mode, chip)
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.hops)
+
+    # -- execution ----------------------------------------------------------
+
+    def run(
+        self,
+        packets,
+        *,
+        backend: str = "auto",
+        chunk_size: int | None = None,
+        interpret: bool | None = None,
+    ) -> FabricRunResult:
+        """Push packets through every hop; bit-exact with single-switch
+        :func:`dataplane.executor.execute` (and the interpreter/oracle)."""
+        backend = _executor.resolve_backend(backend)
+        packets = np.asarray(packets)
+        if packets.ndim != 2 or packets.shape[1] != self.lowered.input_bits:
+            raise ValueError(
+                f"expected (batch, {self.lowered.input_bits}) packet bits, "
+                f"got {packets.shape}"
+            )
+        chunk = chunk_size or _executor.DEFAULT_CHUNK
+        n = packets.shape[0]
+        out = np.empty((n, self.lowered.output_bits), np.int32)
+        hop_seconds = [0.0] * self.num_hops
+        total = 0.0
+        lp = self.lowered
+        in_slot, in_shift, out_slot, out_shift = _executor._device_tables(lp).io
+
+        def push(block: jax.Array) -> jax.Array:
+            regs = _executor.parse_packets(
+                block, in_slot, in_shift, num_regs=lp.num_regs
+            )
+            for hop in self.hops:
+                h0 = time.perf_counter()
+                # The register file leaving this hop is the PHV on the wire.
+                regs = _executor.run_hop(
+                    hop.lowered, regs, backend=backend, interpret=interpret
+                )
+                regs.block_until_ready()
+                hop_seconds[hop.index] += time.perf_counter() - h0
+            return _executor.deparse_regs(regs, out_slot, out_shift)
+
+        # Warm every hop's compiled executable outside the clock (each hop
+        # slice has its own table shapes), so measured pkt/s reflects the
+        # steady state — matching execute_stream's timing discipline.
+        push(jnp.zeros((min(chunk, n), lp.input_bits), jnp.int32)).block_until_ready()
+        hop_seconds = [0.0] * self.num_hops
+
+        for start in range(0, n, chunk):
+            block = packets[start : start + chunk]
+            valid = block.shape[0]
+            pad = chunk - valid if n > chunk else 0
+            if pad:
+                block = np.pad(block, ((0, pad), (0, 0)))
+            dev = jnp.asarray(block)  # H2D outside the clock, as execute_stream
+            t0 = time.perf_counter()
+            res = np.asarray(push(dev))
+            total += time.perf_counter() - t0
+            out[start : start + valid] = res[:valid]
+
+        result = FabricRunResult(
+            outputs=out, packets=n, seconds=total, hop_seconds=hop_seconds
+        )
+        self._last_run = result
+        return result
+
+    # -- accounting ---------------------------------------------------------
+
+    def analytic_report(self):
+        """Chip-rate model under this fabric's mode.
+
+        ``multi_hop`` pipelines hops, so the fabric forwards at the full chip
+        rate regardless of depth; ``recirculate`` divides by the pass count
+        (the program's own ``passes`` against this fabric's chip).
+        """
+        rep = report_for_program(self.program)
+        if self.mode == "multi_hop":
+            passes = 1
+        else:
+            passes = self.num_hops
+        pps = self.chip.packets_per_second / passes
+        return dataclasses.replace(
+            rep,
+            passes=passes,
+            packets_per_second=pps,
+            networks_per_second=pps,
+            neurons_per_second=pps * sum(lp.n_out for lp in self.program.layer_plans),
+            elements_available=self.chip.num_elements,
+        )
+
+    def telemetry(
+        self, run: FabricRunResult | None = None
+    ) -> _telemetry.FabricTelemetry:
+        run = run or self._last_run
+        hop_pps = None
+        measured = None
+        if run is not None:
+            hop_pps = [
+                run.packets / s if s > 0 else float("inf")
+                for s in run.hop_seconds
+            ]
+            measured = run.packets_per_second
+        tel = _telemetry.fabric_telemetry(
+            self.program,
+            self.mode,
+            [h.element_range for h in self.hops],
+            hop_pps=hop_pps,
+            measured_pps=measured,
+            chip=self.chip,  # judge budgets against the fabric's switches
+        )
+        return dataclasses.replace(tel, analytic=self.analytic_report())

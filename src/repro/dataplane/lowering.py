@@ -1,0 +1,347 @@
+"""Lower a :class:`PipelineProgram` into dense uint32 op-tables.
+
+The interpreter (``core.interpreter``) walks the compiled program op-by-op in
+Python — fine as a correctness witness, hopeless as a traffic simulator.  This
+module turns a program into a *table*: one row per primitive ALU operation,
+stored as flat ``(num_elements, max_rows)`` numpy arrays (opcode / dst / src /
+imm / width-mask), so an executor can run the whole program as data, with no
+per-op Python dispatch (``dataplane.executor``).
+
+Two transformations happen on the way down:
+
+* **Opcode normalization** — the 8 front-end opcodes collapse onto 6 dense
+  ALU ops.  ``COPY`` is ``XOR imm=0``; ``XNOR_IMM w`` is ``XOR imm=~w``
+  (``~(r ^ w) == r ^ ~w`` in uint32); ``AND_IMM m`` is ``SHR_AND imm=(0, m)``.
+  ``FOLD`` (variadic deposit) is decomposed into one ``SHL`` micro-row per
+  sign bit; the executor combines same-destination rows additively, which
+  equals OR because each row contributes disjoint bits.
+* **Register compaction** — the compiler allocates an SSA-style fresh field
+  id per value, so ``PipelineProgram.num_fields`` counts every temporary ever
+  created (thousands for a paper-sized net).  A liveness pass renames fields
+  onto a small recycled slot file sized by the *peak* number of simultaneously
+  live fields (hundreds), cutting executor memory and gather width ~10x.
+  Read-before-write element semantics make it safe for an element's outputs
+  to reuse slots its own inputs die in, mirroring RMT's PHV overlay.
+
+Row layout invariants (relied on by executor + Pallas kernel):
+
+* every row of element ``e`` reads the register file as it stood *entering*
+  ``e`` and rows writing the same destination slot are additive after the
+  first (``first_write`` flag);
+* slot ``num_slots`` (one past the compacted file) is the always-zero null
+  register: padding rows write 0 to it and absent src1 operands read it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.pipeline import Op, OpCode, PipelineProgram
+
+# Dense ALU opcodes (the executor's instruction set).
+XOR_IMM = 0      # dst = src0 ^ imm0            (COPY, XNOR_IMM)
+SHR_AND_IMM = 1  # dst = (src0 >> imm0) & imm1  (AND_IMM, HAKMEM marshal, pad)
+ADD = 2          # dst = src0 + src1
+GE_IMM = 3       # dst = src0 >= imm0
+SHL_IMM = 4      # dst = src0 << imm0           (FOLD micro-op)
+POPCNT = 5       # dst = popcount(src0)
+
+DENSE_OPCODE_NAMES = ("xor", "shr_and", "add", "ge", "shl", "popcnt")
+U32 = np.uint32
+FULL = np.uint32(0xFFFFFFFF)
+
+
+def _mask(width: int) -> np.uint32:
+    return FULL if width >= 32 else U32((1 << width) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredProgram:
+    """A pipeline program as dense data.  All tables are numpy; the executor
+    moves them on-device once per program (see ``executor._device_tables``)."""
+
+    source_fingerprint: str
+    chip_name: str
+    num_slots: int               # compacted register file size (excl. null)
+    input_bits: int
+    output_bits: int
+
+    # (num_elements, max_rows) tables; rows past rows_per_element[e] are pads.
+    opcode: np.ndarray           # int32
+    dst: np.ndarray              # int32 slot index
+    src0: np.ndarray             # int32 slot index
+    src1: np.ndarray             # int32 slot index (null slot when unused)
+    imm0: np.ndarray             # uint32
+    imm1: np.ndarray             # uint32
+    mask: np.ndarray             # uint32 destination width mask (0 for pads)
+    first_write: np.ndarray      # int32 — 0 only for FOLD continuation rows
+
+    rows_per_element: np.ndarray  # (num_elements,) int32, true rows per element
+    element_stages: tuple[str, ...]
+    num_ops: int                  # true (unpadded) row count
+
+    # Parser / deparser tables: one entry per packet bit.
+    in_slot_per_bit: np.ndarray   # (input_bits,) int32
+    in_shift_per_bit: np.ndarray  # (input_bits,) uint32
+    out_slot_per_bit: np.ndarray  # (output_bits,) int32
+    out_shift_per_bit: np.ndarray  # (output_bits,) uint32
+
+    @property
+    def num_elements(self) -> int:
+        return self.opcode.shape[0]
+
+    @property
+    def max_rows(self) -> int:
+        return self.opcode.shape[1]
+
+    @property
+    def num_regs(self) -> int:
+        """Register-file width including the trailing null register."""
+        return self.num_slots + 1
+
+    @property
+    def null_slot(self) -> int:
+        return self.num_slots
+
+    def fingerprint(self) -> str:
+        return self.source_fingerprint
+
+    def slice_elements(self, start: int, stop: int) -> "LoweredProgram":
+        """A view of elements ``[start, stop)`` — one fabric hop's table.
+
+        Parser/deparser tables and the register file are inherited whole: the
+        register file *is* the PHV carried between hops, so a hop executes its
+        element range over the same slot space.
+        """
+        if not (0 <= start < stop <= self.num_elements):
+            raise ValueError(
+                f"element slice [{start}, {stop}) out of range "
+                f"[0, {self.num_elements})"
+            )
+        rows = self.rows_per_element[start:stop]
+        return dataclasses.replace(
+            self,
+            source_fingerprint=f"{self.source_fingerprint}[{start}:{stop}]",
+            opcode=self.opcode[start:stop],
+            dst=self.dst[start:stop],
+            src0=self.src0[start:stop],
+            src1=self.src1[start:stop],
+            imm0=self.imm0[start:stop],
+            imm1=self.imm1[start:stop],
+            mask=self.mask[start:stop],
+            first_write=self.first_write[start:stop],
+            rows_per_element=rows,
+            element_stages=self.element_stages[start:stop],
+            num_ops=int(rows.sum()),
+        )
+
+    def used_opcodes(self) -> tuple[int, ...]:
+        """Dense opcodes actually present (pads are SHR_AND; always included
+        so padded rows evaluate)."""
+        present = set(np.unique(self.opcode).tolist())
+        present.add(SHR_AND_IMM)
+        return tuple(sorted(present))
+
+    def summary(self) -> str:
+        return (
+            f"lowered[{self.chip_name}]: elements={self.num_elements} "
+            f"ops={self.num_ops} max_rows={self.max_rows} "
+            f"regs={self.num_regs} io={self.input_bits}b->{self.output_bits}b"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Liveness + slot renaming
+# ---------------------------------------------------------------------------
+
+def _liveness(prog: PipelineProgram) -> tuple[dict[int, int], dict[int, int]]:
+    """Per-field ``def`` element (-1 for inputs) and last-use element
+    (``num_elements`` for outputs — the deparser reads them)."""
+    def_elem: dict[int, int] = {f.fid: -1 for f in prog.input_fields}
+    last_use: dict[int, int] = {}
+    for e, el in enumerate(prog.elements):
+        for op in el.ops:
+            for s in op.srcs:
+                last_use[s.fid] = e
+            def_elem.setdefault(op.dst.fid, e)
+    for fid, d in def_elem.items():
+        last_use.setdefault(fid, d)  # never-read values die where they're born
+    for f in prog.output_fields:
+        last_use[f.fid] = len(prog.elements)
+    return def_elem, last_use
+
+
+class _SlotFile:
+    """Recycling slot allocator.  ``assigned`` records every fid's slot
+    permanently (a fid occupies exactly one slot for its whole lifetime);
+    ``release`` only returns the slot to the free pool for a *later* fid."""
+
+    def __init__(self) -> None:
+        self._free: list[int] = []
+        self._next = 0
+        self._live: set[int] = set()
+        self.assigned: dict[int, int] = {}
+
+    def alloc(self, fid: int) -> int:
+        if self._free:
+            self._free.sort()
+            s = self._free.pop(0)
+        else:
+            s = self._next
+            self._next += 1
+        self.assigned[fid] = s
+        self._live.add(fid)
+        return s
+
+    def release(self, fid: int) -> None:
+        if fid in self._live:
+            self._live.discard(fid)
+            self._free.append(self.assigned[fid])
+
+    @property
+    def high_water(self) -> int:
+        return self._next
+
+
+def _rename_fields(prog: PipelineProgram) -> tuple[dict[int, int], int]:
+    """Liveness-driven rename: fid -> compact executor slot."""
+    def_elem, last_use = _liveness(prog)
+    # Group deaths by element so each element's pass is O(deaths), not O(fields).
+    deaths: dict[int, list[int]] = {}
+    for fid, lu in last_use.items():
+        deaths.setdefault(lu, []).append(fid)
+
+    slots = _SlotFile()
+    for f in prog.input_fields:
+        slots.alloc(f.fid)
+    for e, el in enumerate(prog.elements):
+        # Reads of element e happen before its writes (read-before-write), so
+        # anything last *read* at or before e frees before e's dsts allocate.
+        # A never-read value written at e (last_use == def == e) must survive
+        # its own write; it frees one element later.
+        for fid in deaths.get(e, ()):
+            if def_elem.get(fid, -1) < e:
+                slots.release(fid)
+            else:
+                deaths.setdefault(e + 1, []).append(fid)
+        for op in el.ops:
+            if op.dst.fid not in slots.assigned:
+                slots.alloc(op.dst.fid)
+    return slots.assigned, slots.high_water
+
+
+# ---------------------------------------------------------------------------
+# Lowering proper
+# ---------------------------------------------------------------------------
+
+def _lower_op(op: Op, slot: dict[int, int], null: int) -> list[tuple]:
+    """One front-end op -> dense rows (opcode, dst, s0, s1, i0, i1, mask, first)."""
+    m = _mask(op.dst.width)
+    d = slot.get(op.dst.fid, op.dst.fid)
+
+    def s(i: int) -> int:
+        return slot.get(op.srcs[i].fid, op.srcs[i].fid)
+
+    code = op.opcode
+    if code == OpCode.COPY:
+        return [(XOR_IMM, d, s(0), null, U32(0), U32(0), m, 1)]
+    if code == OpCode.XNOR_IMM:
+        return [(XOR_IMM, d, s(0), null, ~U32(op.imm[0]), U32(0), m, 1)]
+    if code == OpCode.AND_IMM:
+        return [(SHR_AND_IMM, d, s(0), null, U32(0), U32(op.imm[0]), m, 1)]
+    if code == OpCode.SHR_AND_IMM:
+        return [(SHR_AND_IMM, d, s(0), null, U32(op.imm[0]), U32(op.imm[1]), m, 1)]
+    if code == OpCode.ADD:
+        return [(ADD, d, s(0), s(1), U32(0), U32(0), m, 1)]
+    if code == OpCode.GE_IMM:
+        return [(GE_IMM, d, s(0), null, U32(op.imm[0]), U32(0), m, 1)]
+    if code == OpCode.POPCNT:
+        return [(POPCNT, d, s(0), null, U32(0), U32(0), m, 1)]
+    if code == OpCode.FOLD:
+        # One SHL micro-row per sign bit; rows after the first accumulate
+        # (additive == OR: each row deposits a disjoint bit).
+        return [
+            (SHL_IMM, d, s(k), null, U32(k), U32(0), m, 1 if k == 0 else 0)
+            for k in range(len(op.srcs))
+        ]
+    raise ValueError(f"unknown opcode {code}")  # pragma: no cover
+
+
+def lower_program(prog: PipelineProgram, compact: bool = True) -> LoweredProgram:
+    """Lower ``prog`` to dense op-tables.
+
+    ``compact=True`` (default) renames SSA field ids onto a recycled slot
+    file; ``compact=False`` keeps slot == fid (debugging aid — bitwise
+    identical results, much larger register file).
+    """
+    # The compaction mode changes slot numbering, so it is part of the
+    # lowered identity (executor caches are keyed on this fingerprint).
+    fingerprint = f"{prog.fingerprint()}:{'compact' if compact else 'full'}"
+    num_el = len(prog.elements)
+
+    if compact:
+        slot_map, num_slots = _rename_fields(prog)
+    else:
+        slot_map, num_slots = {}, prog.num_fields
+    null = num_slots
+
+    per_element_rows: list[list[tuple]] = []
+    stages: list[str] = []
+    for el in prog.elements:
+        rows: list[tuple] = []
+        for op in el.ops:
+            rows.extend(_lower_op(op, slot_map, null))
+        per_element_rows.append(rows)
+        stages.append(el.stage)
+
+    num_ops = sum(len(r) for r in per_element_rows)
+    max_rows = max((len(r) for r in per_element_rows), default=1)
+    max_rows = max(max_rows, 1)
+    pad_row = (SHR_AND_IMM, null, null, null, U32(0), U32(0), U32(0), 1)
+
+    def table(idx: int, dtype) -> np.ndarray:
+        out = np.empty((num_el, max_rows), dtype=dtype)
+        for e, rows in enumerate(per_element_rows):
+            padded = rows + [pad_row] * (max_rows - len(rows))
+            out[e, :] = [r[idx] for r in padded]
+        return out
+
+    # Parser/deparser bit tables.
+    in_slot, in_shift = [], []
+    for f in prog.input_fields:
+        s = slot_map.get(f.fid, f.fid)
+        in_slot.extend([s] * f.width)
+        in_shift.extend(range(f.width))
+    out_slot, out_shift = [], []
+    for f in prog.output_fields:
+        s = slot_map.get(f.fid, f.fid)
+        out_slot.extend([s] * f.width)
+        out_shift.extend(range(f.width))
+    if len(in_slot) != prog.input_bits or len(out_slot) != prog.output_bits:
+        raise AssertionError("parser/deparser table width mismatch")
+
+    return LoweredProgram(
+        source_fingerprint=fingerprint,
+        chip_name=prog.chip.name,
+        num_slots=num_slots,
+        input_bits=prog.input_bits,
+        output_bits=prog.output_bits,
+        opcode=table(0, np.int32),
+        dst=table(1, np.int32),
+        src0=table(2, np.int32),
+        src1=table(3, np.int32),
+        imm0=table(4, np.uint32),
+        imm1=table(5, np.uint32),
+        mask=table(6, np.uint32),
+        first_write=table(7, np.int32),
+        rows_per_element=np.array(
+            [len(r) for r in per_element_rows], np.int32
+        ),
+        element_stages=tuple(stages),
+        num_ops=num_ops,
+        in_slot_per_bit=np.array(in_slot, np.int32),
+        in_shift_per_bit=np.array(in_shift, np.uint32),
+        out_slot_per_bit=np.array(out_slot, np.int32),
+        out_shift_per_bit=np.array(out_shift, np.uint32),
+    )

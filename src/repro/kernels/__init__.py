@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Kernels here:
+#   bnn_matmul / bnn_matmul_mxu / bitpack — binary-GEMM paths (see ops.py)
+#   optable_exec — fused op-table executor for the dataplane simulator
+#                  (dispatched via repro.dataplane.executor, backend="pallas")

@@ -1,0 +1,138 @@
+"""Pallas kernel: fused op-table executor for lowered pipeline programs.
+
+The accelerator backend of ``dataplane.executor``.  The register file is laid
+out transposed — ``(num_regs, batch)`` uint32, registers on the sublane axis,
+packets on the lane axis — so each ALU row is a dynamic *row* gather
+(``out_ref[pl.ds(slot, 1), :]``), the supported dynamic-index pattern, and
+every scalar op applies across a full lane vector of packets at once (exactly
+how a switch ALU spans the pipeline).
+
+Grid: ``(batch_blocks, num_elements)`` with the element axis innermost; the
+output block's index map ignores the element index, so the register block
+stays resident in VMEM across the whole program for each batch block (the
+same accumulator-residency pattern as ``bnn_matmul``).  Per element the
+kernel makes two passes over the rows — compute into a scratch buffer, then
+write back — preserving RMT's read-before-write semantics.  Scalar tables
+(one row per grid step) live in SMEM; uint32 immediates travel bitcast as
+int32 and are bitcast back per scalar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.dataplane import lowering
+
+_ALL_OPS = (
+    lowering.XOR_IMM,
+    lowering.SHR_AND_IMM,
+    lowering.ADD,
+    lowering.GE_IMM,
+    lowering.SHL_IMM,
+    lowering.POPCNT,
+)
+
+
+def _kernel(
+    opc_ref, dst_ref, s0_ref, s1_ref, i0_ref, i1_ref, m_ref, fw_ref,
+    regs_ref, out_ref, scratch_ref, *, rows: int, used: tuple,
+):
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = regs_ref[...]
+
+    def compute_row(r, carry):
+        # Shared opcode->expression table with the jnp backend; local import
+        # keeps the kernels package from depending on dataplane at load time.
+        from repro.dataplane.executor import alu_variants
+
+        opc = opc_ref[0, r]
+        s0 = s0_ref[0, r]
+        s1 = s1_ref[0, r]
+        i0 = jax.lax.bitcast_convert_type(i0_ref[0, r], jnp.uint32)
+        i1 = jax.lax.bitcast_convert_type(i1_ref[0, r], jnp.uint32)
+        m = jax.lax.bitcast_convert_type(m_ref[0, r], jnp.uint32)
+
+        r0 = out_ref[pl.ds(s0, 1), :]
+        r1 = out_ref[pl.ds(s1, 1), :]
+
+        variants = alu_variants(r0, r1, i0, i1, used)
+        _, val = variants[0]
+        for code, v in variants[1:]:
+            val = jnp.where(opc == code, v, val)
+        scratch_ref[pl.ds(r, 1), :] = val & m
+        return carry
+
+    jax.lax.fori_loop(0, rows, compute_row, 0)
+
+    def write_row(r, carry):
+        dst = dst_ref[0, r]
+        first = fw_ref[0, r]
+        val = scratch_ref[pl.ds(r, 1), :]
+        cur = out_ref[pl.ds(dst, 1), :]
+        # First writer of a slot overwrites; FOLD continuation rows deposit
+        # additional (disjoint) bits additively.
+        out_ref[pl.ds(dst, 1), :] = jnp.where(first == 1, val, cur + val)
+        return carry
+
+    jax.lax.fori_loop(0, rows, write_row, 0)
+
+
+def optable_run(
+    regs: jax.Array,
+    opcode: jax.Array,
+    dst: jax.Array,
+    src0: jax.Array,
+    src1: jax.Array,
+    imm0: jax.Array,
+    imm1: jax.Array,
+    mask: jax.Array,
+    first_write: jax.Array,
+    *,
+    used: tuple | None = None,
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run the op-table over a transposed register file.
+
+    ``regs``: (num_regs, batch) uint32 — parsed packets, one column each.
+    Tables: (num_elements, max_rows) as produced by ``lowering``.  Returns
+    the final (num_regs, batch) register file.
+    """
+    num_regs, batch = regs.shape
+    num_el, rows = opcode.shape
+    if used is None:
+        used = _ALL_OPS
+
+    bb = min(block_b, batch)
+    pad = (-batch) % bb
+    if pad:
+        regs = jnp.pad(regs, ((0, 0), (0, pad)))
+    padded = batch + pad
+
+    as_i32 = functools.partial(jax.lax.bitcast_convert_type, new_dtype=jnp.int32)
+    table_spec = pl.BlockSpec(
+        (1, rows), lambda b, e: (e, 0), memory_space=pltpu.SMEM
+    )
+    regs_spec = pl.BlockSpec((num_regs, bb), lambda b, e: (0, b))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, rows=rows, used=tuple(used)),
+        grid=(padded // bb, num_el),
+        in_specs=[table_spec] * 8 + [regs_spec],
+        out_specs=regs_spec,
+        out_shape=jax.ShapeDtypeStruct((num_regs, padded), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((rows, bb), jnp.uint32)],
+        interpret=interpret,
+    )(
+        opcode, dst, src0, src1,
+        as_i32(imm0), as_i32(imm1), as_i32(mask), first_write,
+        regs,
+    )
+    return out[:, :batch] if pad else out

@@ -1,0 +1,115 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+The real hypothesis package is preferred when installed; test modules fall
+back to this stub so the tier-1 suite collects and runs in environments
+without it.  Only the surface actually used here is implemented:
+
+  * ``strategies.integers(lo, hi)`` / ``strategies.lists(...)`` /
+    ``Strategy.flatmap`` / ``Strategy.map``
+  * ``given(*strategies)`` — draws ``settings.max_examples`` deterministic
+    examples per test (seeded per example index, no shrinking)
+  * ``settings.register_profile`` / ``settings.load_profile``
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Strategy:
+    """A sampler: ``draw(rng) -> value``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def flatmap(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)).example(rng))
+
+    def map(self, fn) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+class _StrategiesModule:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(
+            lambda rng: int(
+                rng.integers(min_value, max_value, endpoint=True, dtype=np.int64)
+            )
+        )
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size, endpoint=True))
+            return [elements.example(rng) for _ in range(n)]
+
+        return Strategy(draw)
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(options) -> Strategy:
+        options = list(options)
+        return Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+
+strategies = _StrategiesModule()
+
+
+class settings:
+    """Profile registry; only ``max_examples`` is honoured."""
+
+    _profiles: dict[str, dict] = {"default": {"max_examples": 10}}
+    _current: dict = _profiles["default"]
+
+    def __init__(self, **kwargs):  # used as decorator in real hypothesis
+        self._kwargs = kwargs
+
+    def __call__(self, fn):
+        fn._stub_settings = self._kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs) -> None:
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = cls._profiles[name]
+
+    @classmethod
+    def max_examples(cls) -> int:
+        return int(cls._current.get("max_examples", 10))
+
+
+def given(*strats: Strategy):
+    """Run the test over deterministic pseudo-random examples."""
+
+    def decorate(fn):
+        overrides = getattr(fn, "_stub_settings", {})
+
+        def wrapper():
+            n = int(overrides.get("max_examples", settings.max_examples()))
+            for i in range(n):
+                rng = np.random.default_rng(0xB90F + 7919 * i)
+                args = [s.example(rng) for s in strats]
+                try:
+                    fn(*args)
+                except Exception as e:  # noqa: BLE001 — attach the failing example
+                    raise AssertionError(
+                        f"falsifying example (stub, draw {i}): {args!r}"
+                    ) from e
+
+        # NOTE: deliberately no functools.wraps — pytest would follow
+        # __wrapped__ and treat the generated arguments as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return decorate

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # environment without hypothesis: deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import bnn, bitops, compile_bnn, run_program, throughput
 from repro.core.pipeline import (
