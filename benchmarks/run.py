@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV:
   * dataplane_bench   — fused op-table executor vs legacy interpreter vs
                         analytic ASIC model, per traffic scenario
                         (DATAPLANE_BENCH_PACKETS tunes the workload)
+  * train_deploy_bench— STE training steps/s + export latency + round-trip
+                        verification (TRAIN_DEPLOY_BENCH_STEPS tunes)
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ def main() -> None:
         roofline_summary,
         table1_elements,
         throughput_model,
+        train_deploy_bench,
     )
 
     print("name,us_per_call,derived")
@@ -33,6 +36,7 @@ def main() -> None:
         kernel_bench,
         roofline_summary,
         dataplane_bench,
+        train_deploy_bench,
     ]
     failures = 0
     for mod in modules:

@@ -1,0 +1,81 @@
+"""Train->deploy loop benchmark: STE steps/s + end-to-end export latency.
+
+Three rows:
+
+* ``bnn_train_step``      — steady-state jitted STE step time (compile
+  excluded) on the example task; derived column reports steps/s and the
+  final training-batch accuracy.
+* ``bnn_export``          — end-to-end export latency: latent -> bit
+  matrices -> ``compile_bnn`` -> lowered op-tables (the deploy-side cost a
+  control plane would pay to push a retrained model to the switch).
+* ``train_deploy_roundtrip`` — verification latency over the held-out set:
+  oracle + fused executor + multi-hop fabric, all compared bit-for-bit.
+  The derived column is the acceptance bit: ``bit_exact=True``.
+
+``TRAIN_DEPLOY_BENCH_STEPS`` shrinks the training budget for CI smoke.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+
+def rows() -> list[tuple[str, float, str]]:
+    from repro.core.export import verify_roundtrip
+    from repro.train.bnn_trainer import BnnTrainConfig, BnnTrainer
+
+    # >= 2: one step is consumed by the jit warm-up outside the clock.
+    steps = max(2, int(os.environ.get("TRAIN_DEPLOY_BENCH_STEPS", 300)))
+    cfg = BnnTrainConfig(
+        steps=steps,
+        train_packets_per_class=max(1024, min(8192, steps * 16)),
+        eval_packets_per_class=max(256, min(5000, steps * 16)),
+    )
+    trainer = BnnTrainer(cfg)
+
+    # One step outside the clock warms the jit cache; train() then times the
+    # steady state.
+    trainer.cfg.steps = 1
+    trainer.train()
+    trainer.cfg.steps = steps
+    summary = trainer.train()
+    acc = summary["history"][-1]["accuracy"] if summary["history"] else float("nan")
+    out = [
+        (
+            "bnn_train_step",
+            1e6 / summary["steps_per_second"],
+            f"steps_per_s={summary['steps_per_second']:.1f} "
+            f"batch={cfg.batch} final_acc={acc:.3f}",
+        )
+    ]
+
+    t0 = time.perf_counter()
+    exported = trainer.export()
+    export_us = (time.perf_counter() - t0) * 1e6
+    out.append(
+        (
+            "bnn_export",
+            export_us,
+            f"elements={exported.program.num_elements} "
+            f"ops={exported.lowered.num_ops} "
+            f"compile_ms={exported.compile_seconds * 1e3:.1f} "
+            f"lower_ms={exported.lower_seconds * 1e3:.1f}",
+        )
+    )
+
+    report = verify_roundtrip(
+        exported,
+        trainer.eval_x,
+        mode="multi_hop",
+        reference_bits=trainer.forward_bits(trainer.eval_x),
+        check=False,
+    )
+    out.append(
+        (
+            "train_deploy_roundtrip",
+            report.verify_seconds * 1e6,
+            f"bit_exact={report.ok} packets={report.packets} "
+            f"hops={report.hops}",
+        )
+    )
+    return out

@@ -8,22 +8,28 @@
 ``interpreter``— JAX executor with exact RMT element semantics.
 ``p4gen``      — P4 source emission.
 ``throughput`` — analytic packets/s -> neurons/s model.
+``export``     — trained weights -> verified deployable artifact.
 """
-from repro.core import bitops, bnn, compiler, interpreter, p4gen, phv, pipeline, throughput
+from repro.core import bitops, bnn, compiler, export, interpreter, p4gen, phv, pipeline, throughput
 from repro.core.bnn import BnnSpec, forward, init_params
 from repro.core.compiler import compile_bnn
+from repro.core.export import ExportedModel, export_bits, export_latent, verify_roundtrip
 from repro.core.interpreter import run_program
 from repro.core.pipeline import RMT, RMT_NATIVE_POPCNT, ChipSpec
 
 __all__ = [
     "BnnSpec",
     "ChipSpec",
+    "ExportedModel",
     "RMT",
     "RMT_NATIVE_POPCNT",
     "bitops",
     "bnn",
     "compile_bnn",
     "compiler",
+    "export",
+    "export_bits",
+    "export_latent",
     "forward",
     "init_params",
     "interpreter",
@@ -32,4 +38,5 @@ __all__ = [
     "pipeline",
     "run_program",
     "throughput",
+    "verify_roundtrip",
 ]

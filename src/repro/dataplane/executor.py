@@ -18,6 +18,19 @@ Backends:
 Streaming (:func:`execute_stream`) re-chunks any packet iterator into
 fixed-size blocks so millions of packets run at constant device memory and a
 single compiled executable.
+
+Invariants:
+
+* **Bit-exactness** — every backend, chunking, and streaming path returns
+  exactly what ``core.interpreter.run_program`` (and hence the
+  ``core.bnn.forward`` oracle) returns for the same program and packets.
+* **One ALU table** — both backends evaluate opcodes through
+  :func:`alu_variants`; a new dense opcode is added there (and in the
+  Pallas kernel's mirror) or nowhere.
+* **Register file == PHV** — the ``(num_regs, batch)`` uint32 file produced
+  by :func:`parse_packets` is the packet state on the wire: fabric hops
+  thread it through :func:`run_hop` unchanged in meaning, and
+  :func:`deparse_regs` only reads, never mutates.
 """
 from __future__ import annotations
 

@@ -15,6 +15,18 @@ carried hop to hop in the packet itself.  This module simulates both:
 Both modes execute identically bit-for-bit (the register file is the wire
 format between hops); they differ in the telemetry/throughput accounting —
 which is exactly the trade the paper's §2 discussion is about.
+
+Invariants:
+
+* **Bit-exactness** — ``SwitchFabric.run`` equals single-switch
+  ``executor.execute``, the interpreter, and the oracle for every
+  partitioning: hop boundaries can never change results, only accounting.
+* **Exact tiling** — hop element ranges are contiguous, disjoint, and cover
+  ``[0, num_elements)``; each hop executes at most ``chip.num_elements``
+  elements.
+* **Shared slot space** — every hop runs over the same compacted register
+  file (the PHV); parser/deparser tables are inherited whole from the
+  unsliced program.
 """
 from __future__ import annotations
 

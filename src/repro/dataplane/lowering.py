@@ -30,6 +30,17 @@ Row layout invariants (relied on by executor + Pallas kernel):
   first (``first_write`` flag);
 * slot ``num_slots`` (one past the compacted file) is the always-zero null
   register: padding rows write 0 to it and absent src1 operands read it.
+
+Cross-module invariants:
+
+* **Bit-exactness** — executing the lowered tables (any backend, any
+  compaction mode, any chunking) equals ``core.interpreter.run_program`` on
+  the source program, bit for bit.  Compaction changes slot numbering only,
+  never results.
+* **Opcode-table stability** — the dense opcode ids below are a contract
+  with ``executor.alu_variants`` and ``kernels.optable_exec``; extend the
+  ISA by appending ids, never by renumbering.  The compaction mode is part
+  of ``LoweredProgram.fingerprint()``, which keys executor device caches.
 """
 from __future__ import annotations
 

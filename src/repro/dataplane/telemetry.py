@@ -13,6 +13,19 @@ last reader (the deparser, for outputs).  An element's occupancy is
 and outputs share the PHV transiently without both counting, which is the
 same overlay discipline the compiler's allocator enforces, so the peak here
 is bounded by ``PipelineProgram.peak_phv_bits``.
+
+Invariants:
+
+* **Observation only** — telemetry never influences execution; it is
+  derived from the program (static footprints) and from timings a fabric
+  run hands over (measured rates).
+* **One liveness rule** — occupancy uses the same def/use pass as the
+  lowering's register compaction (``lowering._liveness``), so
+  ``max(occupancy_bits) <= PipelineProgram.peak_phv_bits <= chip.phv_bits``
+  holds by construction.
+* **Budgets judged against the running chip** — utilization denominators
+  come from the fabric's ``ChipSpec`` (the switches actually executing),
+  not the program's compile-time target.
 """
 from __future__ import annotations
 

@@ -22,6 +22,17 @@ chunked stream keeps its cross-packet structure — the same elephants recur,
 burst phase follows global packet position, sensor walks continue — instead
 of resetting per chunk.  All generators are pure numpy, deterministic per
 ``seed``, and produce ``(n, input_bits)`` int32 arrays in {0,1}.
+
+Invariants:
+
+* **Determinism** — same ``(scenario, n, input_bits, seed)`` means the same
+  bits, on any platform; ``stream`` over ``[0, n)`` in any chunking equals
+  ``generate(n, ...)`` of the same world.  The BNN trainer's train/held-out
+  splits (``train.bnn_trainer.make_traffic_task``) depend on this to carve
+  temporal splits out of one world.
+* **Shape/domain** — every emitter returns exactly ``(n, input_bits)``
+  int32 in {0,1}; ``_fold_bits`` makes any scenario usable at any model
+  input width (fold is parity-preserving per column).
 """
 from __future__ import annotations
 

@@ -1,0 +1,296 @@
+"""Batched straight-through-estimator trainer for deployable BNNs.
+
+The train half of the train->deploy loop.  Latent float weights are trained
+with a jit-compiled STE loop whose forward pass is, *by construction*,
+bit-for-bit the deployed network: hidden activations are hard signs with the
+oracle's tie rule (pre-activation 0 -> +1), weights binarize with
+``bnn.binarize_ste`` (latent >= 0 -> +1), and pre-activations are exact small
+integers in float32 — so :meth:`BnnTrainer.forward_bits` at any training step
+equals ``bnn.forward`` on the would-be exported bit matrices, and therefore
+equals the compiled pipeline, the fused executor, and the switch fabric
+(:func:`repro.core.export.verify_roundtrip` proves the whole chain).
+
+The training task is in-network traffic classification, generated from the
+dataplane's scenario library (:func:`make_traffic_task`): each class is one
+``dataplane.traffic`` scenario, the packet's header bits are the BNN input,
+and the network's single output bit is the classification the switch would
+act on (drop/mirror/mark).  Scaling beyond one output bit means one-vs-all
+heads; the deployed artifact acts on bits, so the trainer keeps the deploy
+semantics honest by training exactly what the switch executes.
+
+Checkpointing follows ``train/trainer.py`` conventions: atomic
+``train.checkpoint`` bundles of ``{"latent", "opt"}`` plus step extras, with
+restore-latest resume.  Batch order is ``(seed, step)``-deterministic, so a
+resumed run replays the interrupted one bit-consistently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bnn
+from repro.core.bnn import BnnSpec, binarize_ste
+from repro.core.export import ExportedModel, bit_weights_from_latent, export_latent
+from repro.core.pipeline import RMT, ChipSpec
+from repro.dataplane import traffic
+from repro.optim.adamw import AdamW
+from repro.train import checkpoint as ckpt
+
+
+# Activations binarize through the same primitive as weights
+# (``bnn.binarize_ste``): hard sign with the oracle's tie rule (0 -> +1)
+# and a |u| <= 1 pass-through gate.  Pre-activations are normalized to
+# roughly unit scale before the sign so the gate bites.
+
+
+def init_latent(spec: BnnSpec, key: jax.Array) -> list[jax.Array]:
+    """Uniform(-1, 1) latent weights — balanced signs, full STE gradient."""
+    latent = []
+    for i in range(spec.num_layers):
+        key, sub = jax.random.split(key)
+        shape = (spec.layer_sizes[i + 1], spec.layer_sizes[i])
+        latent.append(jax.random.uniform(sub, shape, jnp.float32, -1.0, 1.0))
+    return latent
+
+
+def forward_logits(latent: Sequence[jax.Array], x_pm1: jax.Array) -> jax.Array:
+    """STE forward pass on ±1 activations; returns scaled final pre-acts.
+
+    Each layer's pre-activation is divided by ``sqrt(fan_in)`` (unit variance
+    for random ±1 operands) *before* the sign — positive scaling never moves
+    a sign, so the binarized trajectory is untouched while the STE gate and
+    the loss see well-scaled values.
+    """
+    h = x_pm1
+    for w in latent[:-1]:
+        pre = h @ binarize_ste(w).T
+        h = binarize_ste(pre / np.sqrt(w.shape[1]))
+    w = latent[-1]
+    return (h @ binarize_ste(w).T) / np.sqrt(w.shape[1])
+
+
+def forward_bits(latent: Sequence[jax.Array], x_bits: jax.Array) -> jax.Array:
+    """{0,1} outputs of the *deployed* network at the current latent state.
+
+    Bit-exact with ``bnn.forward(bit_weights_from_latent(latent), x_bits)``:
+    pre-activations are sums of ±1 terms, exact in float32, and the positive
+    per-layer scaling cannot flip a sign or perturb a zero tie.
+    """
+    x_pm1 = (2 * x_bits.astype(jnp.float32)) - 1.0
+    return (forward_logits(latent, x_pm1) >= 0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Task generation
+# ---------------------------------------------------------------------------
+
+def make_traffic_task(
+    scenarios: Sequence[str],
+    n_per_class: int,
+    input_bits: int,
+    seed: int = 0,
+    eval_per_class: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """A labeled classification task from dataplane traffic scenarios.
+
+    Class ``i``'s packets are drawn from ``scenarios[i]``.  The split is
+    *temporal*, as a real capture-then-deploy pipeline would be: one trace
+    per class, the first ``n_per_class`` packets train, the last
+    ``eval_per_class`` are held out — unseen packets (sensor walks continue,
+    bursts re-jitter) from the same traffic worlds the model deploys into.
+
+    Returns shuffled ``(train_x, train_y, eval_x, eval_y)``; eval arrays are
+    empty when ``eval_per_class == 0``.  Packets are (n, input_bits) int32
+    {0,1}, labels (n,) int32 class indices.
+    """
+    tr_x, tr_y, ev_x, ev_y = [], [], [], []
+    for i, name in enumerate(scenarios):
+        trace = traffic.generate(
+            name, n_per_class + eval_per_class, input_bits, seed=seed + i
+        )
+        tr_x.append(trace[:n_per_class])
+        tr_y.append(np.full(n_per_class, i, np.int32))
+        ev_x.append(trace[n_per_class:])
+        ev_y.append(np.full(eval_per_class, i, np.int32))
+
+    def shuffle(xs, ys, salt):
+        x = np.concatenate(xs)
+        y = np.concatenate(ys)
+        perm = np.random.default_rng((seed, salt)).permutation(x.shape[0])
+        return x[perm], y[perm]
+
+    train = shuffle(tr_x, tr_y, 0)
+    held = shuffle(ev_x, ev_y, 1)
+    return train[0], train[1], held[0], held[1]
+
+
+# ---------------------------------------------------------------------------
+# Trainer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BnnTrainConfig:
+    """Defaults train the example's headline task in a few CPU seconds."""
+
+    layer_sizes: tuple[int, ...] = (32, 128, 64, 1)
+    scenarios: tuple[str, ...] = ("iot_telemetry", "ddos_burst")
+    steps: int = 600
+    batch: int = 512
+    train_packets_per_class: int = 8192
+    eval_packets_per_class: int = 5000
+    lr: float = 0.02
+    seed: int = 0
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 200
+    log_every: int = 50
+
+    def __post_init__(self):
+        if len(self.scenarios) != 2:
+            raise ValueError(
+                "binary classification only: exactly 2 scenarios "
+                f"(got {len(self.scenarios)}); the deployed switch acts on "
+                "the single output bit"
+            )
+        if self.layer_sizes[-1] != 1:
+            raise ValueError(
+                f"final layer must be 1 neuron (the class bit), got "
+                f"{self.layer_sizes[-1]}"
+            )
+        for name in self.scenarios:
+            traffic.get_scenario(name)  # fail fast on typos
+
+
+class BnnTrainer:
+    """Train a BNN on traffic, then export it into the dataplane fabric."""
+
+    def __init__(self, cfg: BnnTrainConfig):
+        self.cfg = cfg
+        self.spec = BnnSpec(cfg.layer_sizes)
+        self.latent = init_latent(self.spec, jax.random.PRNGKey(cfg.seed))
+        # Latent weights live in [-1, 1]; decay pulls them toward the 0
+        # binarization boundary, so it is off.
+        self.optimizer = AdamW(lr=cfg.lr, weight_decay=0.0, use_master=False)
+        self.opt_state = self.optimizer.init(self.latent)
+        self.step = 0
+        self.history: list[dict] = []
+        (self._train_x, self._train_y, self.eval_x, self.eval_y) = (
+            make_traffic_task(
+                cfg.scenarios,
+                cfg.train_packets_per_class,
+                self.spec.input_bits,
+                seed=cfg.seed,
+                eval_per_class=cfg.eval_packets_per_class,
+            )
+        )
+        self._step_fn = jax.jit(self._train_step)
+        self._bits_fn = jax.jit(forward_bits)
+
+    # -- internals ----------------------------------------------------------
+
+    def _train_step(self, latent, opt_state, x_pm1, y):
+        def loss_fn(lat):
+            logits = forward_logits(lat, x_pm1)[:, 0]
+            margin = (2.0 * y - 1.0) * logits
+            loss = jnp.mean(jax.nn.softplus(-margin))  # BCE with logits
+            acc = jnp.mean(((logits >= 0) == (y == 1)).astype(jnp.float32))
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(latent)
+        latent, opt_state, om = self.optimizer.update(grads, opt_state, latent)
+        # BinaryNet clip: keeps latents where the STE weight gate has signal.
+        latent = [jnp.clip(w, -1.0, 1.0) for w in latent]
+        return latent, opt_state, {"loss": loss, "accuracy": acc, **om}
+
+    def _batch(self, step: int) -> tuple[jax.Array, jax.Array]:
+        idx = np.random.default_rng((self.cfg.seed, step)).integers(
+            0, self._train_x.shape[0], self.cfg.batch
+        )
+        x_pm1 = 2.0 * self._train_x[idx].astype(np.float32) - 1.0
+        return jnp.asarray(x_pm1), jnp.asarray(self._train_y[idx].astype(np.float32))
+
+    def _save(self) -> None:
+        if self.cfg.checkpoint_dir:
+            ckpt.save(
+                self.cfg.checkpoint_dir,
+                self.step,
+                {"latent": self.latent, "opt": self.opt_state},
+                {"step": self.step},
+            )
+
+    def _restore(self) -> bool:
+        if not self.cfg.checkpoint_dir:
+            return False
+        like = {"latent": self.latent, "opt": self.opt_state}
+        got = ckpt.restore_latest(self.cfg.checkpoint_dir, like)
+        if got is None:
+            return False
+        bundle, step, extras = got
+        self.latent = [jnp.asarray(w) for w in bundle["latent"]]
+        self.opt_state = jax.tree_util.tree_map(jnp.asarray, bundle["opt"])
+        self.step = int(extras.get("step", step))
+        return True
+
+    # -- public -------------------------------------------------------------
+
+    def train(self) -> dict:
+        """Run to ``cfg.steps`` (resuming from a checkpoint if one exists)."""
+        resumed = self._restore()
+        start_step = self.step
+        t0 = time.perf_counter()
+        while self.step < self.cfg.steps:
+            x, y = self._batch(self.step)
+            self.latent, self.opt_state, metrics = self._step_fn(
+                self.latent, self.opt_state, x, y
+            )
+            self.step += 1
+            if (
+                self.step % self.cfg.log_every == 0
+                or self.step == 1
+                or self.step == self.cfg.steps
+            ):
+                self.history.append(
+                    {"step": self.step, **{k: float(v) for k, v in metrics.items()}}
+                )
+            if self.cfg.checkpoint_every and self.step % self.cfg.checkpoint_every == 0:
+                self._save()
+        jax.block_until_ready(self.latent)
+        seconds = time.perf_counter() - t0
+        self._save()
+        ran = self.step - start_step
+        return {
+            "final_step": self.step,
+            "resumed": resumed,
+            "seconds": seconds,
+            "steps_per_second": ran / seconds if seconds > 0 else float("inf"),
+            "history": self.history,
+        }
+
+    def forward_bits(self, x_bits) -> np.ndarray:
+        """Deployed-network outputs of the current latent state (train-time
+        witness for the export round-trip)."""
+        return np.asarray(self._bits_fn(self.latent, jnp.asarray(x_bits)))
+
+    def evaluate(self, x_bits, y) -> dict:
+        """Accuracy of the deployed (binarized) network on labeled packets."""
+        bits = self.forward_bits(x_bits)[:, 0]
+        acc = float((bits == np.asarray(y)).mean())
+        return {"accuracy": acc, "packets": int(np.asarray(y).shape[0])}
+
+    def evaluate_held_out(self) -> dict:
+        """Accuracy on the temporal held-out split (unseen packets from the
+        training traffic worlds — the deploy-time distribution)."""
+        return self.evaluate(self.eval_x, self.eval_y)
+
+    def export(self, chip: ChipSpec = RMT) -> ExportedModel:
+        """Round latents to bits and compile into the dataplane (deploy)."""
+        return export_latent(self.latent, chip)
+
+    def oracle_bits(self, x_bits) -> np.ndarray:
+        """Oracle predictions on the exported bit matrices (sanity hook)."""
+        weights = [jnp.asarray(w) for w in bit_weights_from_latent(self.latent)]
+        return np.asarray(bnn.forward(weights, jnp.asarray(x_bits)))

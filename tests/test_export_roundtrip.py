@@ -1,0 +1,192 @@
+"""Export round-trip: trained/arbitrary weights -> compile -> fabric, bit-exact.
+
+Edge cases the train->deploy loop must survive: single-layer nets, sign ties
+at ``popcount == N/2`` (and latent weights exactly 0.0), and models whose
+compiled programs outgrow one switch and partition onto multi-hop fabrics.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bnn
+from repro.core.export import (
+    ExportError,
+    bit_weights_from_latent,
+    export_bits,
+    export_latent,
+    load,
+    verify_roundtrip,
+)
+from repro.core.pipeline import RMT_NATIVE_POPCNT, ChipSpec
+from repro.train.bnn_trainer import forward_bits
+
+
+def _rand_bits(shape, seed=0):
+    return np.random.default_rng(seed).integers(0, 2, shape, dtype=np.int32)
+
+
+def _rand_latent(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.uniform(-1, 1, (sizes[i + 1], sizes[i])).astype(np.float32)
+        for i in range(len(sizes) - 1)
+    ]
+
+
+# -- export construction and validation --------------------------------------
+
+def test_export_bits_builds_spec_program_and_tables():
+    ws = [_rand_bits((4, 8)), _rand_bits((2, 4), seed=1)]
+    ex = export_bits(ws)
+    assert ex.spec.layer_sizes == (8, 4, 2)
+    assert ex.program.input_bits == 8 and ex.lowered.output_bits == 2
+    assert ex.compile_seconds >= 0 and ex.lower_seconds >= 0
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        [],
+        [np.array([0, 1])],                       # 1-D
+        [np.array([[0, 2]])],                     # not {0,1}
+        [_rand_bits((4, 8)), _rand_bits((2, 5))], # fan-in mismatch
+    ],
+)
+def test_export_bits_rejects_bad_weights(bad):
+    with pytest.raises(ExportError):
+        export_bits(bad)
+
+
+def test_bit_weights_from_latent_ties_round_to_one():
+    # latent 0.0 is the binarization boundary: rounds to bit 1 (+1), the same
+    # side binarize_ste and the oracle's SIGN take.
+    bits = bit_weights_from_latent([np.zeros((2, 4), np.float32)])
+    np.testing.assert_array_equal(bits[0], np.ones((2, 4), np.int32))
+
+
+# -- round-trip verification --------------------------------------------------
+
+def test_single_layer_roundtrip():
+    ex = export_bits([_rand_bits((4, 8), seed=2)])
+    x = _rand_bits((64, 8), seed=3)
+    rep = verify_roundtrip(ex, x)
+    assert rep.ok and rep.hops == 1 and rep.packets == 64
+    np.testing.assert_array_equal(
+        ex.oracle_forward(x),
+        np.asarray(bnn.forward([jnp.asarray(w) for w in ex.weights], jnp.asarray(x))),
+    )
+
+
+def test_single_neuron_single_layer_roundtrip():
+    ex = export_bits([_rand_bits((1, 16), seed=4)])
+    assert verify_roundtrip(ex, _rand_bits((32, 16), seed=5)).ok
+
+
+def test_tie_at_half_popcount_is_bit_one_everywhere():
+    # All-ones weights, inputs with exactly N/2 ones: agreement == N/2, so
+    # 2*pop == N — the oracle's tie, which must deploy as bit 1 on every
+    # backend and match the trainer's float forward pass.
+    n = 8
+    ex = export_bits([np.ones((1, n), np.int32)])
+    x = np.zeros((n + 1, n), np.int32)
+    for i in range(n + 1):  # rows with 0..n ones: crosses the tie at n/2
+        x[i, :i] = 1
+    rep = verify_roundtrip(ex, x)
+    assert rep.ok
+    want = (2 * x.sum(axis=1, keepdims=True) >= n).astype(np.int32)
+    np.testing.assert_array_equal(ex.oracle_forward(x), want)
+    assert want[n // 2, 0] == 1  # the tie itself
+    # Trainer-side witness: latent +1 weights binarize to the same network.
+    latent = [np.ones((1, n), np.float32)]
+    np.testing.assert_array_equal(
+        np.asarray(forward_bits([jnp.asarray(w) for w in latent], jnp.asarray(x))),
+        want,
+    )
+
+
+def test_latent_zero_weights_roundtrip_bit_exact():
+    latent = [np.zeros((3, 8), np.float32), np.zeros((2, 3), np.float32)]
+    ex = export_latent(latent)
+    x = _rand_bits((50, 8), seed=6)
+    rep = verify_roundtrip(
+        ex,
+        x,
+        reference_bits=np.asarray(
+            forward_bits([jnp.asarray(w) for w in latent], jnp.asarray(x))
+        ),
+    )
+    assert rep.ok
+
+
+@pytest.mark.parametrize("mode", ["multi_hop", "recirculate"])
+def test_multi_hop_fabric_roundtrip(mode):
+    # (32, 128, 64) outgrows the 32-element chip: the export cannot fit one
+    # switch and must round-trip through a partitioned fabric.
+    latent = _rand_latent((32, 128, 64), seed=7)
+    ex = export_latent(latent)
+    assert ex.program.num_elements > ex.chip.num_elements
+    x = _rand_bits((128, 32), seed=8)
+    rep = verify_roundtrip(
+        ex,
+        x,
+        mode=mode,
+        reference_bits=np.asarray(
+            forward_bits([jnp.asarray(w) for w in latent], jnp.asarray(x))
+        ),
+    )
+    assert rep.ok and rep.hops > 1
+
+
+def test_deep_fabric_with_tiny_chip():
+    ex = export_bits([_rand_bits((8, 16), seed=9), _rand_bits((4, 8), seed=10)])
+    rep = verify_roundtrip(
+        ex, _rand_bits((40, 16), seed=11), fabric_chip=ChipSpec(num_elements=5)
+    )
+    assert rep.ok and rep.hops >= 4
+
+
+def test_native_popcnt_chip_roundtrip():
+    ex = export_bits([_rand_bits((8, 32), seed=12)], chip=RMT_NATIVE_POPCNT)
+    assert verify_roundtrip(ex, _rand_bits((64, 32), seed=13)).ok
+
+
+def test_verify_raises_on_reference_mismatch():
+    ex = export_bits([_rand_bits((4, 8), seed=14)])
+    x = _rand_bits((16, 8), seed=15)
+    wrong = 1 - ex.oracle_forward(x)
+    with pytest.raises(ExportError, match="FAILED"):
+        verify_roundtrip(ex, x, reference_bits=wrong)
+    rep = verify_roundtrip(ex, x, reference_bits=wrong, check=False)
+    assert not rep.ok and rep.reference_mismatches == 16
+    assert rep.executor_mismatches == 0 and rep.fabric_mismatches == 0
+
+
+def test_verify_rejects_bad_shapes():
+    ex = export_bits([_rand_bits((4, 8), seed=16)])
+    with pytest.raises(ExportError):
+        verify_roundtrip(ex, _rand_bits((16, 9)))
+    with pytest.raises(ExportError):
+        verify_roundtrip(
+            ex, _rand_bits((16, 8)), reference_bits=np.zeros((16, 3), np.int32)
+        )
+
+
+# -- persistence --------------------------------------------------------------
+
+def test_save_load_roundtrip(tmp_path):
+    ex = export_latent(_rand_latent((16, 8, 4), seed=17))
+    d = ex.save(str(tmp_path / "model"))
+    got = load(d)
+    assert got.program.fingerprint() == ex.program.fingerprint()
+    for a, b in zip(got.weights, ex.weights):
+        np.testing.assert_array_equal(a, b)
+    x = _rand_bits((32, 16), seed=18)
+    np.testing.assert_array_equal(got.oracle_forward(x), ex.oracle_forward(x))
+
+
+def test_load_detects_chip_mismatch(tmp_path):
+    ex = export_bits([_rand_bits((4, 32), seed=19)])
+    d = ex.save(str(tmp_path / "model"))
+    with pytest.raises(ExportError, match="fingerprint"):
+        load(d, chip=RMT_NATIVE_POPCNT)

@@ -1,0 +1,70 @@
+"""Markdown link checker (stdlib-only; the CI docs job runs this).
+
+Scans every tracked ``*.md`` file for inline links/images
+``[text](target)`` and verifies that relative-path targets exist on disk.
+External schemes (http/https/mailto), pure in-page anchors (``#...``), and
+bare autolinks are skipped; a ``path#anchor`` target is checked for the
+path part only.
+
+Usage: python tools/check_md_links.py [root]      (default: repo root)
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# Inline [text](target) / ![alt](target); target ends at the first ')' —
+# good enough for the plain paths these docs use.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def md_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        out.extend(
+            os.path.join(dirpath, f) for f in filenames if f.endswith(".md")
+        )
+    return sorted(out)
+
+
+def check_file(path: str, root: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    errors = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            base = root if rel.startswith("/") else os.path.dirname(path)
+            resolved = os.path.normpath(os.path.join(base, rel.lstrip("/")))
+            if not os.path.exists(resolved):
+                errors.append(
+                    f"{os.path.relpath(path, root)}:{lineno}: "
+                    f"broken link -> {target}"
+                )
+    return errors
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else
+                           os.path.join(os.path.dirname(__file__), ".."))
+    files = md_files(root)
+    errors = [e for p in files for e in check_file(p, root)]
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
