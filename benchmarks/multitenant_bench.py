@@ -1,0 +1,118 @@
+"""Multi-tenant scheduler benchmark: aggregate pkts/s vs tenant count.
+
+One shared chip serves 2..``MULTITENANT_BENCH_TENANTS`` independently
+compiled BNN classifiers over a mixed tagged stream, in both scheduling
+modes.  The two modes trade differently in software than on the ASIC:
+**merged** runs one fused pass over the *union* of all tenants' elements, so
+simulator cost per packet grows with tenant count (on the real chip those
+stages execute spatially in parallel — merged is the mode that keeps every
+tenant at line rate, which is what the analytic model in
+``SwitchScheduler.analytic_pps`` reports); **time-sliced** dispatches each
+tenant's narrow table separately and pays per-turn scheduling overhead
+instead.  This bench pins the simulator-side costs of both so regressions in
+either path are visible.
+
+``MULTITENANT_BENCH_TENANTS`` caps the tenant sweep (default 4; CI smoke
+sets 3).  ``MULTITENANT_BENCH_PACKETS`` sets the stream length per run
+(default 200k; CI smoke shrinks it).  ``us_per_call`` is microseconds per
+scheduled device dispatch (merged: per mixed chunk; sliced: per turn).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import bnn, compile_bnn
+from repro.core.pipeline import ChipSpec
+from repro.dataplane import (
+    SwitchScheduler,
+    TenantTrafficSpec,
+    mixed_tenant_stream,
+)
+
+# Distinct small nets so merged tables mix shapes, scenarios, and widths.
+_SHAPES = [(32, 64, 32), (16, 32, 8), (32, 16), (8, 12, 6), (16, 8, 4), (32, 32, 4)]
+_SCENARIOS = ("ddos_burst", "iot_telemetry", "flow_tuple",
+              "adversarial_bitflip", "uniform_random")
+_WEIGHTS = (3.0, 2.0, 1.0, 1.0, 2.0, 1.0)
+
+
+def _tenant_pool(count: int):
+    import jax
+
+    progs, specs = [], []
+    for i in range(count):
+        shape = _SHAPES[i % len(_SHAPES)]
+        params = bnn.init_params(bnn.BnnSpec(shape), jax.random.PRNGKey(i))
+        progs.append(compile_bnn([np.asarray(w) for w in params]))
+        specs.append(
+            TenantTrafficSpec(
+                _SCENARIOS[i % len(_SCENARIOS)], shape[0],
+                _WEIGHTS[i % len(_WEIGHTS)],
+            )
+        )
+    return progs, specs
+
+
+def rows() -> list[tuple[str, float, str]]:
+    max_tenants = max(2, int(os.environ.get("MULTITENANT_BENCH_TENANTS", 4)))
+    n_packets = int(os.environ.get("MULTITENANT_BENCH_PACKETS", 200_000))
+    chunk = min(1 << 14, n_packets)
+    progs, specs = _tenant_pool(max_tenants)
+    # Element/PHV budgets sized to admit the largest merge: the sweep is
+    # about scheduling cost, not admission (tests cover admission).
+    chip = ChipSpec(
+        num_elements=sum(p.num_elements for p in progs) + 1,
+        phv_bits=sum(p.peak_phv_bits for p in progs),
+        name="shared",
+    )
+
+    out = []
+    for count in range(2, max_tenants + 1):
+        sched = SwitchScheduler(chip, quantum=chunk)
+        for i in range(count):
+            sched.admit(progs[i], name=f"t{i}", weight=specs[i].weight)
+        for mode in ("merged", "time_sliced"):
+            res = sched.run(
+                mixed_tenant_stream(
+                    specs[:count], n_packets, chunk_size=chunk, seed=count
+                ),
+                mode=mode,
+                backend="jnp",
+                chunk_size=chunk,
+                collect=False,
+            )
+            dispatches = (
+                res.chunks
+                if mode == "merged"
+                else sum(st.slices for st in res.tenants)
+            )
+            per_pps = [st.packets_per_second for st in res.tenants]
+            tag = "merged" if mode == "merged" else "sliced"
+            out.append(
+                (
+                    f"multitenant_{tag}_t{count}",
+                    1e6 * res.seconds / max(1, dispatches),
+                    f"pps={res.packets_per_second:.3e} packets={res.packets} "
+                    f"tenants={count} dispatches={dispatches} "
+                    f"tenant_pps_min={min(per_pps):.3e} "
+                    f"tenant_pps_max={max(per_pps):.3e}",
+                )
+            )
+    footprint = sum(p.num_elements for p in progs)
+    out.append(
+        (
+            "multitenant_footprint",
+            0.0,
+            f"tenants={max_tenants} merged_elements={footprint} "
+            f"chip_elements={chip.num_elements} "
+            f"phv_bits={sum(p.peak_phv_bits for p in progs)}",
+        )
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.2f},{derived}")

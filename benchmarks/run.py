@@ -11,16 +11,65 @@ Prints ``name,us_per_call,derived`` CSV:
                         (DATAPLANE_BENCH_PACKETS tunes the workload)
   * train_deploy_bench— STE training steps/s + export latency + round-trip
                         verification (TRAIN_DEPLOY_BENCH_STEPS tunes)
+  * multitenant_bench — aggregate pkts/s vs tenant count, merged vs
+                        time-sliced scheduling (MULTITENANT_BENCH_TENANTS /
+                        MULTITENANT_BENCH_PACKETS tune)
+
+Besides the CSV, each module's rows land in ``BENCH_<module>.json`` (in
+``BENCH_OUT_DIR``, default cwd) with every ``key=<float>`` pair from the
+derived column parsed into a ``metrics`` map — the artifact
+``tools/check_bench_regression.py`` gates CI on — and a per-module timing
+summary is printed at the end (``# timing ...`` lines) so slow modules are
+visible in the job log.
 """
 from __future__ import annotations
 
+import json
+import os
+import re
 import sys
+import time
+
+_METRIC_RE = re.compile(r"(\w+)=([-+]?[0-9][0-9_]*\.?[0-9]*(?:[eE][-+]?[0-9]+)?)\b")
+
+
+def parse_metrics(derived: str) -> dict[str, float]:
+    """Every ``key=<number>`` pair in a derived column, as floats."""
+    out = {}
+    for key, val in _METRIC_RE.findall(derived):
+        try:
+            out[key] = float(val)
+        except ValueError:  # pragma: no cover - regex already filters
+            continue
+    return out
+
+
+def write_bench_json(out_dir: str, module: str, seconds: float, rows) -> str:
+    path = os.path.join(out_dir, f"BENCH_{module}.json")
+    payload = {
+        "module": module,
+        "seconds": round(seconds, 3),
+        "rows": [
+            {
+                "name": name,
+                "us_per_call": us,
+                "derived": derived,
+                "metrics": parse_metrics(derived),
+            }
+            for name, us, derived in rows
+        ],
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path
 
 
 def main() -> None:
     from benchmarks import (
         dataplane_bench,
         kernel_bench,
+        multitenant_bench,
         popcnt_ablation,
         roofline_summary,
         table1_elements,
@@ -28,6 +77,7 @@ def main() -> None:
         train_deploy_bench,
     )
 
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
     print("name,us_per_call,derived")
     modules = [
         table1_elements,
@@ -37,15 +87,31 @@ def main() -> None:
         roofline_summary,
         dataplane_bench,
         train_deploy_bench,
+        multitenant_bench,
     ]
     failures = 0
+    timings: list[tuple[str, float, bool]] = []
     for mod in modules:
+        short = mod.__name__.rsplit(".", 1)[-1]
+        t0 = time.perf_counter()
         try:
-            for name, us, derived in mod.rows():
-                print(f"{name},{us:.2f},{derived}")
+            rows = mod.rows()
         except Exception as e:  # noqa: BLE001
             failures += 1
+            timings.append((short, time.perf_counter() - t0, False))
             print(f"{mod.__name__},nan,ERROR {type(e).__name__}: {e}")
+            continue
+        seconds = time.perf_counter() - t0
+        timings.append((short, seconds, True))
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")
+        write_bench_json(out_dir, short, seconds, rows)
+
+    total = sum(s for _, s, _ in timings)
+    print(f"# timing: {total:.1f}s total across {len(timings)} modules")
+    for short, seconds, ok in sorted(timings, key=lambda t: -t[1]):
+        status = "" if ok else "  [FAILED]"
+        print(f"# timing {short:<22} {seconds:>7.1f}s{status}")
     if failures:
         sys.exit(1)
 

@@ -12,10 +12,9 @@ the unpacked vector (little-endian within a word).  ``pack_bits`` /
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 WORD = 32  # packing word width (uint32)
 

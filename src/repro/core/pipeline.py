@@ -136,7 +136,9 @@ class PipelineProgram:
 
     @property
     def passes(self) -> int:
-        """Pipeline passes (recirculations) needed on a 32-element chip."""
+        """Pipeline passes needed on this program's chip — i.e. ``passes - 1``
+        recirculations; a program that fits runs in 1 pass (0 recirculations).
+        """
         return max(1, math.ceil(self.num_elements / self.chip.num_elements))
 
     def fingerprint(self) -> str:

@@ -3,24 +3,49 @@
 Line-rate simulation layer over the N2Net core: programs are lowered to
 dense op-tables (``lowering``), executed fused and batched (``executor``,
 with a Pallas kernel in ``kernels.optable_exec``), fed from a traffic
-scenario library (``traffic``), and scaled past one chip's element budget by
-a simulated multi-switch fabric with per-stage telemetry (``fabric``,
-``telemetry``).
+scenario library (``traffic``), scaled past one chip's element budget by a
+simulated multi-switch fabric with per-stage telemetry (``fabric``,
+``telemetry``), and shared between independently compiled programs by a
+multi-tenant scheduler (``multitenant``).
 """
-from repro.dataplane import executor, fabric, lowering, telemetry, traffic
+from repro.dataplane import (
+    executor,
+    fabric,
+    lowering,
+    multitenant,
+    telemetry,
+    traffic,
+)
 from repro.dataplane.executor import DEFAULT_CHUNK, execute, execute_stream
 from repro.dataplane.fabric import MODES, SwitchFabric
 from repro.dataplane.lowering import LoweredProgram, lower_program
+from repro.dataplane.multitenant import (
+    AdmissionError,
+    SCHEDULER_MODES,
+    SwitchScheduler,
+)
 from repro.dataplane.telemetry import FabricTelemetry, stage_telemetry
-from repro.dataplane.traffic import SCENARIOS, generate, get_scenario, stream
+from repro.dataplane.traffic import (
+    SCENARIOS,
+    TenantTrafficSpec,
+    generate,
+    get_scenario,
+    mixed_tenant_generate,
+    mixed_tenant_stream,
+    stream,
+)
 
 __all__ = [
+    "AdmissionError",
     "DEFAULT_CHUNK",
     "FabricTelemetry",
     "LoweredProgram",
     "MODES",
     "SCENARIOS",
+    "SCHEDULER_MODES",
     "SwitchFabric",
+    "SwitchScheduler",
+    "TenantTrafficSpec",
     "execute",
     "execute_stream",
     "executor",
@@ -29,6 +54,9 @@ __all__ = [
     "get_scenario",
     "lower_program",
     "lowering",
+    "mixed_tenant_generate",
+    "mixed_tenant_stream",
+    "multitenant",
     "stage_telemetry",
     "stream",
     "telemetry",

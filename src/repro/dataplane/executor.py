@@ -19,6 +19,11 @@ Streaming (:func:`execute_stream`) re-chunks any packet iterator into
 fixed-size blocks so millions of packets run at constant device memory and a
 single compiled executable.
 
+Routed parse/deparse (:func:`parse_packets_routed`,
+:func:`deparse_regs_routed`) generalize the parser to per-packet program
+selection — the entry point ``dataplane.multitenant`` uses to serve several
+merged programs from one register file in a single pass.
+
 Invariants:
 
 * **Bit-exactness** — every backend, chunking, and streaming path returns
@@ -125,6 +130,54 @@ def deparse_regs(regs: jax.Array, out_slot, out_shift) -> jax.Array:
     """(num_regs, batch) -> (batch, output_bits) {0,1} int32."""
     words = jnp.take(regs, out_slot, axis=0)  # (output_bits, batch)
     return ((words >> out_shift[:, None]) & jnp.uint32(1)).T.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_regs",))
+def parse_packets_routed(
+    packets: jax.Array,
+    program_ids: jax.Array,
+    slot_table: jax.Array,
+    shift_table: jax.Array,
+    valid_table: jax.Array,
+    *,
+    num_regs: int,
+):
+    """Per-packet-program parser for a shared register file.
+
+    ``packets``: (batch, max_bits) {0,1}; ``program_ids``: (batch,) int32
+    selecting each packet's row of the ``(num_programs, max_bits)`` parser
+    tables.  Bits whose ``valid_table`` entry is 0 (width padding for
+    narrower programs) land harmlessly in the null slot with value 0.  This
+    is how a multi-tenant merge parses a mixed stream into disjoint
+    register windows in one dispatch (``dataplane.multitenant``).
+    """
+    batch = packets.shape[0]
+    pkt = packets.astype(jnp.uint32)                    # (batch, max_bits)
+    slots = jnp.take(slot_table, program_ids, axis=0)   # (batch, max_bits)
+    shifts = jnp.take(shift_table, program_ids, axis=0)
+    valid = jnp.take(valid_table, program_ids, axis=0)
+    vals = (pkt & valid) << shifts
+    regs = jnp.zeros((num_regs, batch), jnp.uint32)
+    cols = jnp.arange(batch, dtype=jnp.int32)[:, None]
+    return regs.at[slots, cols].add(vals)
+
+
+@jax.jit
+def deparse_regs_routed(
+    regs: jax.Array,
+    program_ids: jax.Array,
+    out_slot_table: jax.Array,
+    out_shift_table: jax.Array,
+) -> jax.Array:
+    """(num_regs, batch) -> (batch, max_out_bits) {0,1} int32, reading each
+    packet's bits through its own program's deparser table.  Width-padding
+    entries point at the null register and deparse as 0."""
+    batch = regs.shape[1]
+    slots = jnp.take(out_slot_table, program_ids, axis=0)   # (batch, bits)
+    shifts = jnp.take(out_shift_table, program_ids, axis=0)
+    cols = jnp.arange(batch, dtype=jnp.int32)[:, None]
+    words = regs[slots, cols]                               # (batch, bits)
+    return ((words >> shifts) & jnp.uint32(1)).astype(jnp.int32)
 
 
 def alu_variants(r0, r1, i0, i1, used: tuple) -> list:

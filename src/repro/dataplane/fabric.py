@@ -85,6 +85,7 @@ class SwitchFabric:
         self.mode = mode
         self.chip = chip
         self._last_run: FabricRunResult | None = None
+        self._analytic_memo = None
 
     # -- construction -------------------------------------------------------
 
@@ -195,15 +196,22 @@ class SwitchFabric:
 
         ``multi_hop`` pipelines hops, so the fabric forwards at the full chip
         rate regardless of depth; ``recirculate`` divides by the pass count
-        (the program's own ``passes`` against this fabric's chip).
+        (``num_hops`` passes — i.e. ``num_hops - 1`` recirculations — against
+        this fabric's chip, not the program's compile-time target).
+
+        Memoized per fabric: hops and chip are fixed at partition time, and
+        the telemetry path calls this on every ``run`` — recomputing the
+        report (an O(program) walk) per call was pure waste.
         """
+        if self._analytic_memo is not None:
+            return self._analytic_memo
         rep = report_for_program(self.program)
         if self.mode == "multi_hop":
             passes = 1
         else:
             passes = self.num_hops
         pps = self.chip.packets_per_second / passes
-        return dataclasses.replace(
+        self._analytic_memo = dataclasses.replace(
             rep,
             passes=passes,
             packets_per_second=pps,
@@ -211,6 +219,7 @@ class SwitchFabric:
             neurons_per_second=pps * sum(lp.n_out for lp in self.program.layer_plans),
             elements_available=self.chip.num_elements,
         )
+        return self._analytic_memo
 
     def telemetry(
         self, run: FabricRunResult | None = None

@@ -147,6 +147,70 @@ class LoweredProgram:
             num_ops=int(rows.sum()),
         )
 
+    def with_slot_window(self, offset: int, total_slots: int) -> "LoweredProgram":
+        """Relocate this program's register file to slots ``[offset, offset +
+        num_slots)`` of a ``total_slots``-wide shared file.
+
+        Every slot reference (dst/src/parser/deparser) shifts by ``offset``;
+        references to this program's own null register retarget the shared
+        file's null (``total_slots``).  This is the table half of multi-tenant
+        merging (``dataplane.multitenant``): programs relocated to disjoint
+        windows can share one register file — and one executor pass — without
+        interfering, because no remapped row can address another window.
+        """
+        if offset < 0 or offset + self.num_slots > total_slots:
+            raise ValueError(
+                f"window [{offset}, {offset + self.num_slots}) does not fit "
+                f"a {total_slots}-slot file"
+            )
+
+        def remap(tbl: np.ndarray) -> np.ndarray:
+            return np.where(
+                tbl == self.null_slot, np.int32(total_slots), tbl + offset
+            ).astype(np.int32)
+
+        return dataclasses.replace(
+            self,
+            source_fingerprint=(
+                f"{self.source_fingerprint}@{offset}/{total_slots}"
+            ),
+            num_slots=total_slots,
+            dst=remap(self.dst),
+            src0=remap(self.src0),
+            src1=remap(self.src1),
+            in_slot_per_bit=remap(self.in_slot_per_bit),
+            out_slot_per_bit=remap(self.out_slot_per_bit),
+        )
+
+    def pad_rows(self, max_rows: int) -> "LoweredProgram":
+        """Widen the row axis to ``max_rows`` with no-op pad rows (write 0 to
+        the null register, mask 0).  Needed before concatenating programs
+        whose elements have different row widths."""
+        if max_rows < self.max_rows:
+            raise ValueError(
+                f"cannot shrink row axis {self.max_rows} -> {max_rows}"
+            )
+        if max_rows == self.max_rows:
+            return self
+        extra = max_rows - self.max_rows
+        null = self.null_slot
+
+        def pad(tbl: np.ndarray, value) -> np.ndarray:
+            return np.pad(tbl, ((0, 0), (0, extra)), constant_values=value)
+
+        return dataclasses.replace(
+            self,
+            source_fingerprint=f"{self.source_fingerprint}|rows{max_rows}",
+            opcode=pad(self.opcode, SHR_AND_IMM),
+            dst=pad(self.dst, null),
+            src0=pad(self.src0, null),
+            src1=pad(self.src1, null),
+            imm0=pad(self.imm0, U32(0)),
+            imm1=pad(self.imm1, U32(0)),
+            mask=pad(self.mask, U32(0)),
+            first_write=pad(self.first_write, 1),
+        )
+
     def used_opcodes(self) -> tuple[int, ...]:
         """Dense opcodes actually present (pads are SHR_AND; always included
         so padded rows evaluate)."""

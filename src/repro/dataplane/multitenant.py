@@ -1,0 +1,712 @@
+"""Multi-tenant switch scheduling: time-share one simulated chip across
+several independently compiled programs.
+
+A real deployment does not dedicate a switching chip to one classifier: the
+same pipeline hosts a DDoS detector, an IoT profiler, and a flow tagger at
+once (the Brain-on-Switch direction, arXiv:2403.11090).  This module is the
+serving analogue of ``serving/engine.py`` for the dataplane: a
+:class:`SwitchScheduler` admits N compiled :class:`PipelineProgram`s onto one
+:class:`ChipSpec` and runs them over a *mixed* packet stream — packets tagged
+with tenant ids (``traffic.mixed_tenant_stream``) — in one of two modes:
+
+* **merged** — the tenants' op-tables are concatenated into one table with
+  per-program register-window offsets (``LoweredProgram.with_slot_window``)
+  and a program-id column, so a *single* fused executor pass serves every
+  tenant on the mixed stream at full line rate.  Windows are disjoint, so no
+  tenant's rows can address another tenant's registers: per-tenant results
+  are bit-exact with single-program runs by construction.  Feasible only
+  while the merged footprint fits the chip (sum of elements <= element
+  budget, sum of peak PHV footprints <= PHV bits).
+* **time_sliced** — when the merged tables exceed the chip's element budget,
+  the chip alternates between programs: packets are demultiplexed into
+  per-tenant FIFO queues and served in weighted round-robin turns of at most
+  ``quantum * weight / max(weight)`` packets each, each turn running the
+  tenant's own program.  Queue overflow beyond ``max_queue`` drops packets
+  (tail drop); backlog beyond a turn's quantum counts as *deferred* —
+  per-tenant telemetry exposes both.
+
+Invariants:
+
+* **Per-tenant bit-exactness** — in both modes, each tenant's served packets
+  produce exactly the outputs of a single-program ``executor.execute`` (and
+  hence the interpreter and the ``bnn.forward`` oracle) on the same packets
+  in the same order.  Merging relocates registers and interleaves element
+  ranges; it never changes any tenant's results.
+* **Admission before execution** — ``admit`` rejects programs that cannot
+  run on the chip at all (elements or peak PHV over budget), and in forced
+  ``merged`` mode programs whose merged footprint would overflow; ``auto``
+  falls back to time-slicing instead of rejecting.
+* **Conservation** — per tenant, ``arrived == served + dropped``; nothing is
+  silently lost between the mixed stream and the per-tenant outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Iterator, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import RMT, ChipSpec, PipelineProgram
+from repro.dataplane import executor as _executor
+from repro.dataplane import telemetry as _telemetry
+from repro.dataplane.lowering import LoweredProgram, lower_program
+
+SCHEDULER_MODES = ("auto", "merged", "time_sliced")
+DEFAULT_QUANTUM = 4096
+
+
+class AdmissionError(Exception):
+    """A program cannot be admitted onto the shared chip."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    """One admitted program and its share of the chip."""
+
+    tid: int
+    name: str
+    program: PipelineProgram
+    lowered: LoweredProgram
+    weight: float
+
+
+@dataclasses.dataclass(frozen=True)
+class MergedProgram:
+    """N tenants' op-tables fused into one executable table.
+
+    ``lowered`` is a real :class:`LoweredProgram` over the shared register
+    file (``executor.run_hop`` executes it unchanged); the extra columns are
+    the multi-tenant bookkeeping: which tenant owns each element
+    (``element_program`` — the program-id column) and the per-tenant
+    parser/deparser routing tables consumed by
+    ``executor.parse_packets_routed`` / ``deparse_regs_routed``.
+    """
+
+    lowered: LoweredProgram
+    element_program: np.ndarray              # (num_elements,) int32 tenant id
+    slot_windows: tuple[tuple[int, int], ...]
+    element_ranges: tuple[tuple[int, int], ...]
+    in_slot: np.ndarray                      # (T, max_in_bits) int32
+    in_shift: np.ndarray                     # (T, max_in_bits) uint32
+    in_valid: np.ndarray                     # (T, max_in_bits) uint32 {0,1}
+    out_slot: np.ndarray                     # (T, max_out_bits) int32
+    out_shift: np.ndarray                    # (T, max_out_bits) uint32
+    in_bits: np.ndarray                      # (T,) int32 true input widths
+    out_bits: np.ndarray                     # (T,) int32 true output widths
+
+    @property
+    def num_tenants(self) -> int:
+        return len(self.slot_windows)
+
+
+def merge_lowered(
+    lowereds: Sequence[LoweredProgram], chip: ChipSpec
+) -> MergedProgram:
+    """Concatenate lowered programs into one table over disjoint register
+    windows.  Purely structural — no budget checks (the scheduler's
+    admission/mode logic owns those)."""
+    if not lowereds:
+        raise ValueError("merge_lowered needs at least one program")
+    total_slots = sum(lp.num_slots for lp in lowereds)
+    max_rows = max(lp.max_rows for lp in lowereds)
+    null = total_slots
+
+    parts: list[LoweredProgram] = []
+    windows: list[tuple[int, int]] = []
+    offset = 0
+    for lp in lowereds:
+        parts.append(lp.with_slot_window(offset, total_slots).pad_rows(max_rows))
+        windows.append((offset, offset + lp.num_slots))
+        offset += lp.num_slots
+
+    ranges: list[tuple[int, int]] = []
+    start = 0
+    for lp in lowereds:
+        ranges.append((start, start + lp.num_elements))
+        start += lp.num_elements
+
+    def cat(field: str) -> np.ndarray:
+        return np.concatenate([getattr(p, field) for p in parts], axis=0)
+
+    merged = LoweredProgram(
+        source_fingerprint=(
+            "merged(" + "+".join(p.fingerprint() for p in parts) + ")"
+        ),
+        chip_name=chip.name,
+        num_slots=total_slots,
+        input_bits=int(max(lp.input_bits for lp in lowereds)),
+        output_bits=int(max(lp.output_bits for lp in lowereds)),
+        opcode=cat("opcode"),
+        dst=cat("dst"),
+        src0=cat("src0"),
+        src1=cat("src1"),
+        imm0=cat("imm0"),
+        imm1=cat("imm1"),
+        mask=cat("mask"),
+        first_write=cat("first_write"),
+        rows_per_element=cat("rows_per_element"),
+        element_stages=tuple(
+            f"t{tid}:{stage}"
+            for tid, p in enumerate(parts)
+            for stage in p.element_stages
+        ),
+        num_ops=sum(p.num_ops for p in parts),
+        # Per-packet-bit parser tables are ill-defined for a merged program
+        # (each packet routes through its own tenant's tables); the routed
+        # tables below replace them.  Left empty so any accidental use of the
+        # single-program parse path fails loudly on shape.
+        in_slot_per_bit=np.zeros(0, np.int32),
+        in_shift_per_bit=np.zeros(0, np.uint32),
+        out_slot_per_bit=np.zeros(0, np.int32),
+        out_shift_per_bit=np.zeros(0, np.uint32),
+    )
+
+    max_in = merged.input_bits
+    max_out = merged.output_bits
+    t_count = len(parts)
+    in_slot = np.full((t_count, max_in), null, np.int32)
+    in_shift = np.zeros((t_count, max_in), np.uint32)
+    in_valid = np.zeros((t_count, max_in), np.uint32)
+    out_slot = np.full((t_count, max_out), null, np.int32)
+    out_shift = np.zeros((t_count, max_out), np.uint32)
+    for t, (p, lp) in enumerate(zip(parts, lowereds)):
+        in_slot[t, : lp.input_bits] = p.in_slot_per_bit
+        in_shift[t, : lp.input_bits] = p.in_shift_per_bit
+        in_valid[t, : lp.input_bits] = 1
+        out_slot[t, : lp.output_bits] = p.out_slot_per_bit
+        out_shift[t, : lp.output_bits] = p.out_shift_per_bit
+
+    return MergedProgram(
+        lowered=merged,
+        element_program=np.concatenate(
+            [
+                np.full(lp.num_elements, t, np.int32)
+                for t, lp in enumerate(lowereds)
+            ]
+        ),
+        slot_windows=tuple(windows),
+        element_ranges=tuple(ranges),
+        in_slot=in_slot,
+        in_shift=in_shift,
+        in_valid=in_valid,
+        out_slot=out_slot,
+        out_shift=out_shift,
+        in_bits=np.array([lp.input_bits for lp in lowereds], np.int32),
+        out_bits=np.array([lp.output_bits for lp in lowereds], np.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Run results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TenantRunStats:
+    """One tenant's traffic accounting for a scheduler run."""
+
+    tid: int
+    name: str
+    packets: int = 0        # arrived on the mixed stream
+    served: int = 0         # executed (== packets - dropped)
+    dropped: int = 0        # tail-dropped at queue admission (time-sliced)
+    deferred: int = 0       # packet-turns spent waiting past a quantum
+    slices: int = 0         # scheduling turns executed (time-sliced)
+    seconds: float = 0.0    # device time attributed to this tenant
+    outputs: np.ndarray | None = None  # (served, out_bits) int32 if collected
+
+    @property
+    def packets_per_second(self) -> float:
+        return self.served / self.seconds if self.seconds > 0 else float("inf")
+
+
+@dataclasses.dataclass
+class SchedulerRunResult:
+    """Outcome of pushing a mixed stream through the shared chip."""
+
+    mode: str
+    packets: int
+    seconds: float
+    chunks: int
+    tenants: list[TenantRunStats]
+
+    @property
+    def packets_per_second(self) -> float:
+        served = sum(t.served for t in self.tenants)
+        return served / self.seconds if self.seconds > 0 else float("inf")
+
+    def stats_for(self, tid: int) -> TenantRunStats:
+        for t in self.tenants:
+            if t.tid == tid:
+                return t
+        raise KeyError(f"no tenant {tid} in this run")
+
+    def outputs_for(self, tid: int) -> np.ndarray:
+        out = self.stats_for(tid).outputs
+        if out is None:
+            raise ValueError("run was not collected; pass collect=True")
+        return out
+
+
+def _rechunk_mixed(
+    chunks: Iterable[tuple[np.ndarray, np.ndarray]], chunk_size: int
+) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Re-slice a (tenant_ids, bits) chunk stream into exactly-``chunk_size``
+    blocks (last may be short) — the mixed-stream twin of
+    ``executor._rechunk``."""
+    buf_t: list[np.ndarray] = []
+    buf_b: list[np.ndarray] = []
+    have = 0
+    for tids, bits in chunks:
+        tids, bits = np.asarray(tids), np.asarray(bits)
+        if tids.shape[0] != bits.shape[0]:
+            raise ValueError(
+                f"tenant ids ({tids.shape[0]}) and packets ({bits.shape[0]}) "
+                "disagree on chunk length"
+            )
+        while bits.shape[0]:
+            take = min(chunk_size - have, bits.shape[0])
+            buf_t.append(tids[:take])
+            buf_b.append(bits[:take])
+            have += take
+            tids, bits = tids[take:], bits[take:]
+            if have == chunk_size:
+                yield np.concatenate(buf_t), np.concatenate(buf_b, axis=0)
+                buf_t, buf_b, have = [], [], 0
+    if have:
+        yield np.concatenate(buf_t), np.concatenate(buf_b, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+class SwitchScheduler:
+    """Admit N compiled programs onto one chip and serve a mixed stream.
+
+    ``mode="auto"`` merges while the combined footprint fits the chip and
+    falls back to weighted-round-robin time-slicing when it does not;
+    ``"merged"``/``"time_sliced"`` force one strategy (forced merge makes
+    admission reject overflowing programs instead of falling back).
+    """
+
+    def __init__(
+        self,
+        chip: ChipSpec = RMT,
+        *,
+        mode: str = "auto",
+        quantum: int = DEFAULT_QUANTUM,
+        max_queue: int | None = None,
+    ):
+        if mode not in SCHEDULER_MODES:
+            raise ValueError(
+                f"mode must be one of {SCHEDULER_MODES}, got {mode!r}"
+            )
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.chip = chip
+        self.mode = mode
+        self.quantum = quantum
+        self.max_queue = max_queue
+        self.tenants: list[Tenant] = []
+        self._merged: MergedProgram | None = None
+        self._last_run: SchedulerRunResult | None = None
+
+    # -- admission -----------------------------------------------------------
+
+    def _merged_footprint(self, extra: PipelineProgram | None = None):
+        progs = [t.program for t in self.tenants]
+        if extra is not None:
+            progs.append(extra)
+        return (
+            sum(p.num_elements for p in progs),
+            sum(p.peak_phv_bits for p in progs),
+        )
+
+    def merge_feasible(self, extra: PipelineProgram | None = None) -> bool:
+        """Would the current tenants (plus ``extra``) fit one merged pass?"""
+        elements, phv = self._merged_footprint(extra)
+        return elements <= self.chip.num_elements and phv <= self.chip.phv_bits
+
+    def admit(
+        self,
+        prog: PipelineProgram,
+        *,
+        name: str | None = None,
+        weight: float = 1.0,
+    ) -> Tenant:
+        """Admit one compiled program, or raise :class:`AdmissionError`.
+
+        Every program must fit the chip on its own (one pipeline pass, PHV
+        within budget) — a program that cannot run alone cannot run in any
+        shared mode.  Forced ``merged`` mode additionally requires the merged
+        footprint to stay within the chip; ``auto`` falls back to
+        time-slicing instead.
+        """
+        if weight <= 0:
+            raise ValueError(f"weight must be positive, got {weight}")
+        if prog.num_elements > self.chip.num_elements:
+            raise AdmissionError(
+                f"program needs {prog.num_elements} elements, chip "
+                f"{self.chip.name!r} has {self.chip.num_elements} "
+                "(recirculation is a single-program fabric concern, not a "
+                "shared-chip one)"
+            )
+        if prog.peak_phv_bits > self.chip.phv_bits:
+            raise AdmissionError(
+                f"program peak PHV {prog.peak_phv_bits}b exceeds chip "
+                f"{self.chip.name!r} PHV {self.chip.phv_bits}b"
+            )
+        if self.mode == "merged" and not self.merge_feasible(prog):
+            elements, phv = self._merged_footprint(prog)
+            raise AdmissionError(
+                f"merged footprint would be {elements} elements / {phv}b PHV "
+                f"against a {self.chip.num_elements}-element / "
+                f"{self.chip.phv_bits}b chip; use mode='auto' to fall back "
+                "to time-slicing"
+            )
+        tenant = Tenant(
+            tid=len(self.tenants),
+            name=name or f"tenant{len(self.tenants)}",
+            program=prog,
+            lowered=lower_program(prog, compact=True),
+            weight=float(weight),
+        )
+        self.tenants.append(tenant)
+        self._merged = None  # table layout changed
+        return tenant
+
+    # -- mode / merged table -------------------------------------------------
+
+    def resolve_mode(self) -> str:
+        """The mode a run will actually use ("merged" or "time_sliced")."""
+        if self.mode == "auto":
+            return "merged" if self.merge_feasible() else "time_sliced"
+        return self.mode
+
+    def merged(self) -> MergedProgram:
+        """The fused table for the current tenant set (cached per layout)."""
+        if not self.tenants:
+            raise ValueError("no tenants admitted")
+        if self.mode != "merged" and not self.merge_feasible():
+            raise ValueError(
+                "merged footprint exceeds the chip; run() would time-slice"
+            )
+        if self._merged is None:
+            self._merged = merge_lowered(
+                [t.lowered for t in self.tenants], self.chip
+            )
+        return self._merged
+
+    def _quanta(self) -> list[int]:
+        """Per-tenant packets per scheduling turn: the heaviest tenant gets
+        the full quantum, the rest proportionally fewer (weighted RR)."""
+        top = max(t.weight for t in self.tenants)
+        return [
+            max(1, int(round(self.quantum * t.weight / top)))
+            for t in self.tenants
+        ]
+
+    # -- execution -----------------------------------------------------------
+
+    def run(
+        self,
+        stream,
+        *,
+        mode: str | None = None,
+        backend: str = "auto",
+        chunk_size: int | None = None,
+        collect: bool = True,
+        interpret: bool | None = None,
+    ) -> SchedulerRunResult:
+        """Serve a mixed stream: an iterable of ``(tenant_ids, bits)`` chunks
+        (e.g. ``traffic.mixed_tenant_stream``) or one such pair.
+
+        Per-tenant outputs (``collect=True``) are bit-exact with each
+        tenant's single-program ``executor.execute`` over its served packets.
+        """
+        if not self.tenants:
+            raise ValueError("no tenants admitted")
+        mode = mode or self.resolve_mode()
+        if mode not in ("merged", "time_sliced"):
+            raise ValueError(
+                f"run mode must be 'merged' or 'time_sliced', got {mode!r}"
+            )
+        if mode == "merged" and not self.merge_feasible():
+            raise ValueError(
+                "merged footprint exceeds the chip; use mode='time_sliced'"
+            )
+        backend = _executor.resolve_backend(backend)
+        if isinstance(stream, tuple) and len(stream) == 2:
+            stream = [stream]
+        chunk = chunk_size or _executor.DEFAULT_CHUNK
+
+        stats = [TenantRunStats(t.tid, t.name) for t in self.tenants]
+        if mode == "merged":
+            result = self._run_merged(
+                stream, stats, backend, chunk, collect, interpret
+            )
+        else:
+            result = self._run_time_sliced(
+                stream, stats, backend, collect, interpret
+            )
+        self._last_run = result
+        return result
+
+    def _check_chunk(self, tids: np.ndarray, bits: np.ndarray, width: int):
+        if bits.ndim != 2 or bits.shape[1] != width:
+            raise ValueError(
+                f"expected (batch, {width}) mixed packet bits, got {bits.shape}"
+            )
+        if tids.size and (tids.min() < 0 or tids.max() >= len(self.tenants)):
+            raise ValueError(
+                f"tenant ids out of range [0, {len(self.tenants)})"
+            )
+
+    def _run_merged(
+        self, stream, stats, backend, chunk, collect, interpret
+    ) -> SchedulerRunResult:
+        mp = self.merged()
+        lp = mp.lowered
+        in_slot = jnp.asarray(mp.in_slot)
+        in_shift = jnp.asarray(mp.in_shift)
+        in_valid = jnp.asarray(mp.in_valid)
+        out_slot = jnp.asarray(mp.out_slot)
+        out_shift = jnp.asarray(mp.out_shift)
+        width = mp.in_slot.shape[1]
+        collected: list[list[np.ndarray]] = [[] for _ in self.tenants]
+
+        def push(tids_dev, bits_dev):
+            regs = _executor.parse_packets_routed(
+                bits_dev, tids_dev, in_slot, in_shift, in_valid,
+                num_regs=lp.num_regs,
+            )
+            regs = _executor.run_hop(
+                lp, regs, backend=backend, interpret=interpret
+            )
+            return _executor.deparse_regs_routed(
+                regs, tids_dev, out_slot, out_shift
+            )
+
+        seconds = 0.0
+        n_chunks = 0
+        for tids, bits in _rechunk_mixed(stream, chunk):
+            self._check_chunk(tids, bits, width)
+            n = bits.shape[0]
+            pad = chunk - n
+            if pad:  # stable shapes: one compiled executable for the run
+                bits = np.pad(bits, ((0, pad), (0, 0)))
+                tids = np.pad(tids, (0, pad))
+            bits_dev, tids_dev = jnp.asarray(bits), jnp.asarray(tids)
+            if n_chunks == 0:  # warm the compile cache outside the clock
+                push(tids_dev, bits_dev).block_until_ready()
+            t0 = time.perf_counter()
+            res = np.asarray(push(tids_dev, bits_dev))
+            seconds += time.perf_counter() - t0
+            res, tids = res[:n], tids[:n]
+            for t, st in enumerate(stats):
+                rows = np.nonzero(tids == t)[0]
+                if not rows.size:
+                    continue
+                st.packets += int(rows.size)
+                st.served += int(rows.size)
+                if collect:
+                    collected[t].append(res[rows, : mp.out_bits[t]])
+            n_chunks += 1
+
+        for t, st in enumerate(stats):
+            # One fused pass serves everyone: wall time is shared, so every
+            # tenant's rate is its packet share of the common clock.
+            st.seconds = seconds
+            if collect:
+                st.outputs = (
+                    np.concatenate(collected[t])
+                    if collected[t]
+                    else np.zeros((0, int(mp.out_bits[t])), np.int32)
+                )
+        return SchedulerRunResult(
+            mode="merged",
+            packets=sum(st.packets for st in stats),
+            seconds=seconds,
+            chunks=n_chunks,
+            tenants=stats,
+        )
+
+    def _run_time_sliced(
+        self, stream, stats, backend, collect, interpret
+    ) -> SchedulerRunResult:
+        quanta = self._quanta()
+        width = max(int(t.lowered.input_bits) for t in self.tenants)
+        queues: list[list[np.ndarray]] = [[] for _ in self.tenants]
+        queued = [0] * len(self.tenants)
+        collected: list[list[np.ndarray]] = [[] for _ in self.tenants]
+        warmed = [False] * len(self.tenants)
+        seconds_total = 0.0
+        n_chunks = 0
+
+        def serve_turn(t: int) -> None:
+            """One weighted-RR turn: run up to ``quanta[t]`` queued packets
+            through tenant t's own program."""
+            st = stats[t]
+            take = min(queued[t], quanta[t])
+            if take == 0:
+                return
+            st.deferred += queued[t] - take  # backlog waits >= 1 more turn
+            batch = np.concatenate(queues[t])[:queued[t]]
+            head, tail = batch[:take], batch[take:]
+            queues[t] = [tail] if tail.size else []
+            queued[t] -= take
+            pad = quanta[t] - take  # fixed turn shape: one compile per tenant
+            block = np.pad(head, ((0, pad), (0, 0))) if pad else head
+            dev = jnp.asarray(block)
+            lp = self.tenants[t].lowered
+            if not warmed[t]:
+                np.asarray(
+                    _executor._run_chunk(lp, dev, backend, interpret)
+                )
+                warmed[t] = True
+            t0 = time.perf_counter()
+            res = np.asarray(
+                _executor._run_chunk(lp, dev, backend, interpret)
+            )
+            st.seconds += time.perf_counter() - t0
+            st.served += take
+            st.slices += 1
+            if collect:
+                collected[t].append(res[:take])
+
+        for tids, bits in stream:
+            tids, bits = np.asarray(tids), np.asarray(bits)
+            self._check_chunk(tids, bits, bits.shape[1] if bits.ndim == 2 else -1)
+            if bits.shape[1] < width:
+                raise ValueError(
+                    f"mixed packets are {bits.shape[1]}b wide; widest tenant "
+                    f"needs {width}b"
+                )
+            n_chunks += 1
+            for t, tenant in enumerate(self.tenants):
+                rows = np.nonzero(tids == t)[0]
+                if not rows.size:
+                    continue
+                st = stats[t]
+                st.packets += int(rows.size)
+                arrived = bits[rows, : int(tenant.lowered.input_bits)]
+                if self.max_queue is not None:
+                    space = self.max_queue - queued[t]
+                    if arrived.shape[0] > space:  # tail drop at admission
+                        st.dropped += int(arrived.shape[0] - space)
+                        arrived = arrived[:space]
+                if arrived.shape[0]:
+                    queues[t].append(arrived)
+                    queued[t] += int(arrived.shape[0])
+            # The chip alternates tenants while anyone has a full quantum
+            # waiting; sub-quantum remainders wait for more arrivals (they
+            # are served — quantum-padded — only in the end-of-stream drain).
+            while any(q >= quanta[t] for t, q in enumerate(queued)):
+                for t in range(len(self.tenants)):
+                    if queued[t] >= quanta[t]:
+                        serve_turn(t)
+
+        while any(queued):  # end of stream: drain every backlog
+            for t in range(len(self.tenants)):
+                serve_turn(t)
+
+        for t, st in enumerate(stats):
+            seconds_total += st.seconds
+            if collect:
+                st.outputs = (
+                    np.concatenate(collected[t])
+                    if collected[t]
+                    else np.zeros(
+                        (0, int(self.tenants[t].lowered.output_bits)), np.int32
+                    )
+                )
+        return SchedulerRunResult(
+            mode="time_sliced",
+            packets=sum(st.packets for st in stats),
+            seconds=seconds_total,
+            chunks=n_chunks,
+            tenants=stats,
+        )
+
+    # -- accounting ----------------------------------------------------------
+
+    def analytic_pps(self, mode: str | None = None) -> list[float]:
+        """Chip-model packets/s available to each tenant under ``mode``.
+
+        Merged: one pass serves the mixed stream, so every tenant sees the
+        full line rate (its *offered* load is governed by arrival shares).
+        Time-sliced: the chip is a shared server — each tenant gets its
+        weighted share of the line rate.
+        """
+        mode = mode or self.resolve_mode()
+        if mode == "merged":
+            return [self.chip.packets_per_second] * len(self.tenants)
+        total = sum(t.weight for t in self.tenants)
+        return [
+            self.chip.packets_per_second * t.weight / total
+            for t in self.tenants
+        ]
+
+    def telemetry(
+        self, run: SchedulerRunResult | None = None
+    ) -> _telemetry.MultiTenantTelemetry:
+        """Per-tenant rollup (static footprints + the latest run's traffic)."""
+        if not self.tenants:
+            raise ValueError("no tenants admitted")
+        run = run or self._last_run
+        mode = run.mode if run is not None else self.resolve_mode()
+        pps = self.analytic_pps(mode)
+        merged_ok = self.merge_feasible()
+        mp = self.merged() if (mode == "merged" and merged_ok) else None
+
+        # Tenants admitted after the recorded run have no stats in it: report
+        # them with zeroed traffic counters instead of failing the lookup.
+        by_tid = {s.tid: s for s in run.tenants} if run is not None else {}
+        rows = []
+        for i, tenant in enumerate(self.tenants):
+            stages = _telemetry.stage_telemetry(tenant.program, self.chip)
+            st = by_tid.get(tenant.tid)
+            if mp is not None:
+                window = mp.slot_windows[i]
+                el_range = mp.element_ranges[i]
+            else:
+                window = (0, tenant.lowered.num_slots)
+                el_range = None
+            rows.append(
+                _telemetry.TenantTelemetry(
+                    tid=tenant.tid,
+                    name=tenant.name,
+                    elements=tenant.program.num_elements,
+                    slot_window=window,
+                    element_range=el_range,
+                    weight=tenant.weight,
+                    analytic_pps=pps[i],
+                    peak_occupancy_bits=max(
+                        s.occupancy_bits for s in stages
+                    ),
+                    peak_alu_utilization=max(
+                        s.alu_utilization for s in stages
+                    ),
+                    packets=st.packets if st else 0,
+                    served=st.served if st else 0,
+                    dropped=st.dropped if st else 0,
+                    deferred=st.deferred if st else 0,
+                    slices=st.slices if st else 0,
+                    measured_pps=st.packets_per_second if st else None,
+                )
+            )
+        elements, phv = self._merged_footprint()
+        return _telemetry.MultiTenantTelemetry(
+            mode=mode,
+            chip_name=self.chip.name,
+            elements_used=elements,
+            elements_available=self.chip.num_elements,
+            phv_bits_used=phv,
+            phv_bits_available=self.chip.phv_bits,
+            tenants=tuple(rows),
+            measured_pps=run.packets_per_second if run is not None else None,
+        )

@@ -168,6 +168,78 @@ class FabricTelemetry:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantTelemetry:
+    """One tenant's view of a shared chip (``dataplane.multitenant``).
+
+    Static fields come from the tenant's own program (stage occupancy and
+    ALU budgets are per-program — merging relocates registers, it never
+    changes a tenant's footprint); traffic fields come from a scheduler run.
+    """
+
+    tid: int
+    name: str
+    elements: int
+    slot_window: tuple[int, int]       # register window in the shared file
+    element_range: tuple[int, int] | None  # rows in the merged table (merged mode)
+    weight: float
+    analytic_pps: float                # chip-model rate under the active mode
+    peak_occupancy_bits: int
+    peak_alu_utilization: float
+    packets: int = 0
+    served: int = 0
+    dropped: int = 0
+    deferred: int = 0
+    slices: int = 0                    # scheduling turns (time-sliced mode)
+    measured_pps: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenantTelemetry:
+    """Scheduler-level rollup: who shares the chip and what each got."""
+
+    mode: str                          # "merged" | "time_sliced"
+    chip_name: str
+    elements_used: int                 # merged footprint (sum of tenants)
+    elements_available: int
+    phv_bits_used: int                 # sum of tenant peak PHV footprints
+    phv_bits_available: int
+    tenants: tuple[TenantTelemetry, ...]
+    measured_pps: float | None = None  # aggregate over the mixed stream
+
+    @property
+    def total_packets(self) -> int:
+        return sum(t.packets for t in self.tenants)
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(t.dropped for t in self.tenants)
+
+    def render(self) -> str:
+        lines = [
+            f"scheduler[{self.chip_name}] mode={self.mode} "
+            f"tenants={len(self.tenants)} "
+            f"elements={self.elements_used}/{self.elements_available} "
+            f"phv={self.phv_bits_used}/{self.phv_bits_available}b",
+        ]
+        if self.measured_pps is not None:
+            lines.append(f"  aggregate measured: {self.measured_pps:.3e} pkt/s")
+        lines.append(
+            "  tid name             elems  window      weight  analytic pkt/s"
+            "  packets  drop  defer  slices  measured pkt/s"
+        )
+        for t in self.tenants:
+            m = f"{t.measured_pps:.3e}" if t.measured_pps is not None else "-"
+            lines.append(
+                f"  {t.tid:>3} {t.name:<16} {t.elements:>5} "
+                f" {t.slot_window[0]:>4}..{t.slot_window[1]:<5} "
+                f"{t.weight:>6.2f}  {t.analytic_pps:>14.3e} "
+                f" {t.packets:>7}  {t.dropped:>4}  {t.deferred:>5} "
+                f" {t.slices:>6}  {m:>14}"
+            )
+        return "\n".join(lines)
+
+
 def fabric_telemetry(
     prog: PipelineProgram,
     mode: str,

@@ -23,6 +23,17 @@ burst phase follows global packet position, sensor walks continue — instead
 of resetting per chunk.  All generators are pure numpy, deterministic per
 ``seed``, and produce ``(n, input_bits)`` int32 arrays in {0,1}.
 
+The packet sequence is *defined* over fixed canonical emission chunks
+(``CANONICAL_CHUNK`` packets): the randomness for the chunk starting at
+absolute position ``p`` derives from ``(seed, p)`` alone, and the world is
+seeded separately.  Any consumer chunking — ``generate``, ``stream`` at any
+``chunk_size``, a stream paused and resumed mid-trace — re-slices the same
+canonical sequence.  (Earlier revisions threaded one rng through every emit
+call, which made the sequence depend on chunk boundaries whenever an emitter
+issues several differently-shaped draws: resuming a stream mid-scenario
+changed the packets.  The canonical-chunk scheme makes the advertised
+invariance hold by construction.)
+
 Invariants:
 
 * **Determinism** — same ``(scenario, n, input_bits, seed)`` means the same
@@ -43,6 +54,14 @@ import numpy as np
 
 # Canonical 5-tuple layout: src ip (32) dst ip (32) ports (16+16) proto (8).
 _TUPLE_BITS = 104
+
+# The packet sequence is defined over emission chunks of this many packets;
+# chunk ``p`` draws from ``default_rng([seed, _EMIT_TAG, p])``.  Part of the
+# sequence definition: changing it changes every scenario's packets.
+CANONICAL_CHUNK = 1024
+_SETUP_TAG = 0
+_EMIT_TAG = 1
+_ASSIGN_TAG = 2
 
 
 def _fold_bits(bits: np.ndarray, width: int) -> np.ndarray:
@@ -82,33 +101,87 @@ def _gray(vals: np.ndarray) -> np.ndarray:
 class Scenario:
     """``setup(rng, bits) -> state`` once per trace, then
     ``emit(state, rng, start, n, bits)`` over absolute packet positions
-    ``[start, start + n)``.  ``state`` may be mutable (e.g. sensor walks)."""
+    ``[start, start + n)``.  ``state`` may be mutable (e.g. sensor walks).
+
+    Emission happens in canonical ``CANONICAL_CHUNK``-packet chunks with a
+    per-chunk rng derived from ``(seed, chunk position)`` — see the module
+    docstring — so the sequence is identical under any consumer chunking.
+    """
 
     name: str
     description: str
     _setup: Callable[[np.random.Generator, int], Any]
     _emit: Callable[[Any, np.random.Generator, int, int, int], np.ndarray]
 
+    def iter_chunks(
+        self, input_bits: int, seed: int = 0
+    ) -> Iterator[np.ndarray]:
+        """Infinite iterator over the canonical emission chunks of one world."""
+        if input_bits <= 0:
+            raise ValueError(f"input_bits must be positive, got {input_bits}")
+        state = self._setup(
+            np.random.default_rng([seed, _SETUP_TAG]), input_bits
+        )
+        start = 0
+        while True:
+            rng = np.random.default_rng([seed, _EMIT_TAG, start])
+            out = self._emit(state, rng, start, CANONICAL_CHUNK, input_bits)
+            assert (
+                out.shape == (CANONICAL_CHUNK, input_bits)
+                and out.dtype == np.int32
+            )
+            yield out
+            start += CANONICAL_CHUNK
+
     def generate(self, n: int, input_bits: int, seed: int = 0) -> np.ndarray:
         """(n, input_bits) int32 {0,1} packet activation bits."""
         if n < 0 or input_bits <= 0:
             raise ValueError(f"bad trace shape n={n} input_bits={input_bits}")
-        rng = np.random.default_rng(seed)
-        out = self._emit(self._setup(rng, input_bits), rng, 0, n, input_bits)
-        assert out.shape == (n, input_bits) and out.dtype == np.int32
-        return out
+        if n == 0:
+            return np.zeros((0, input_bits), np.int32)
+        chunks = []
+        have = 0
+        for c in self.iter_chunks(input_bits, seed):
+            chunks.append(c)
+            have += c.shape[0]
+            if have >= n:
+                break
+        return np.concatenate(chunks, axis=0)[:n]
 
     def stream(
         self, n: int, input_bits: int, *, chunk_size: int, seed: int = 0
     ) -> Iterator[np.ndarray]:
-        """Emit the same world as one trace, in bounded chunks."""
+        """Emit the same world (and exact packet sequence) as ``generate``,
+        re-sliced into ``chunk_size``-packet chunks."""
         if chunk_size <= 0:
             raise ValueError(f"chunk_size must be positive, got {chunk_size}")
-        rng = np.random.default_rng(seed)
-        state = self._setup(rng, input_bits)
+        src = _Puller(self.iter_chunks(input_bits, seed))
         for start in range(0, n, chunk_size):
-            take = min(chunk_size, n - start)
-            yield self._emit(state, rng, start, take, input_bits)
+            yield src.pull(min(chunk_size, n - start))
+
+
+class _Puller:
+    """Re-slice an infinite chunk iterator into pull-sized pieces."""
+
+    def __init__(self, it: Iterator[np.ndarray]):
+        self._it = it
+        self._buf: list[np.ndarray] = []
+        self._have = 0
+
+    def pull(self, k: int) -> np.ndarray:
+        while self._have < k:
+            c = next(self._it)
+            self._buf.append(c)
+            self._have += c.shape[0]
+        flat = (
+            np.concatenate(self._buf, axis=0)
+            if len(self._buf) > 1
+            else self._buf[0]
+        )
+        out, rest = flat[:k], flat[k:]
+        self._buf = [rest] if rest.shape[0] else []
+        self._have = rest.shape[0]
+        return out
 
 
 # -- scenario implementations -----------------------------------------------
@@ -240,4 +313,112 @@ def stream(
     """Yield a scenario as bounded chunks sharing one persistent world."""
     return get_scenario(name).stream(
         n, input_bits, chunk_size=chunk_size, seed=seed
+    )
+
+
+# -- mixed-tenant traffic -----------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantTrafficSpec:
+    """One tenant's share of a mixed stream: which scenario generates its
+    packets, how wide its model's input is, and its arrival weight."""
+
+    scenario: str
+    input_bits: int
+    weight: float = 1.0
+
+    def __post_init__(self) -> None:
+        get_scenario(self.scenario)  # fail fast on unknown names
+        if self.input_bits <= 0:
+            raise ValueError(f"input_bits must be positive, got {self.input_bits}")
+        if self.weight <= 0:
+            raise ValueError(f"weight must be positive, got {self.weight}")
+
+
+def tenant_stream_seed(seed: int, tid: int) -> int:
+    """The derived seed of tenant ``tid``'s scenario sub-stream within a
+    mixed trace.  Exposed so tests can reproduce one tenant's packets with
+    plain :func:`generate` — tenant ``t``'s subsequence in a mixed stream IS
+    ``generate(spec.scenario, count_t, spec.input_bits, seed=this)``."""
+    return int(np.random.SeedSequence([seed, tid]).generate_state(1)[0])
+
+
+def _assignment_chunks(
+    n_tenants: int, weights: np.ndarray, seed: int
+) -> Iterator[np.ndarray]:
+    """Canonical-chunk iterator of weighted i.i.d. tenant-id draws."""
+    start = 0
+    while True:
+        rng = np.random.default_rng([seed, _ASSIGN_TAG, start])
+        yield rng.choice(n_tenants, size=CANONICAL_CHUNK, p=weights).astype(
+            np.int32
+        )
+        start += CANONICAL_CHUNK
+
+
+def mixed_tenant_stream(
+    specs: list[TenantTrafficSpec] | tuple[TenantTrafficSpec, ...],
+    n: int,
+    *,
+    chunk_size: int,
+    seed: int = 0,
+) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Interleave per-tenant scenario streams into one tagged packet stream.
+
+    Yields ``(tenant_ids, bits)`` chunks: ``tenant_ids`` is ``(k,)`` int32,
+    ``bits`` is ``(k, max(input_bits))`` int32 {0,1} with each row generated
+    by its tenant's scenario at the tenant's width and zero-padded to the
+    common width.  Arrival order is an i.i.d. weighted draw; each tenant's
+    *subsequence* is exactly that tenant's scenario stream under the seed
+    :func:`tenant_stream_seed` derives (setup once, per-tenant world
+    persists across chunks, positions are tenant-local).
+
+    Determinism matches :meth:`Scenario.stream`: same ``(specs, n, seed)``
+    gives the same packets under any chunking — assignment and every
+    tenant's emission ride the canonical-chunk scheme, and each tenant's
+    packet positions depend only on cumulative assignment counts.
+    """
+    if not specs:
+        raise ValueError("mixed_tenant_stream needs at least one tenant spec")
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    width = max(s.input_bits for s in specs)
+    weights = np.array([s.weight for s in specs], np.float64)
+    weights = weights / weights.sum()
+
+    assign = _Puller(_assignment_chunks(len(specs), weights, seed))
+    pullers = [
+        _Puller(
+            get_scenario(sp.scenario).iter_chunks(
+                sp.input_bits, seed=tenant_stream_seed(seed, t)
+            )
+        )
+        for t, sp in enumerate(specs)
+    ]
+
+    for start in range(0, n, chunk_size):
+        k = min(chunk_size, n - start)
+        tids = assign.pull(k)
+        bits = np.zeros((k, width), np.int32)
+        for t, sp in enumerate(specs):
+            rows = np.nonzero(tids == t)[0]
+            if rows.size:
+                bits[rows, : sp.input_bits] = pullers[t].pull(rows.size)
+        yield tids, bits
+
+
+def mixed_tenant_generate(
+    specs: list[TenantTrafficSpec] | tuple[TenantTrafficSpec, ...],
+    n: int,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """One-shot form of :func:`mixed_tenant_stream`: ``(tenant_ids, bits)``
+    for the whole trace."""
+    chunks = list(mixed_tenant_stream(specs, n, chunk_size=max(1, n), seed=seed))
+    if not chunks:
+        width = max(s.input_bits for s in specs)
+        return np.zeros(0, np.int32), np.zeros((0, width), np.int32)
+    return (
+        np.concatenate([t for t, _ in chunks]),
+        np.concatenate([b for _, b in chunks]),
     )

@@ -214,12 +214,12 @@ def binary_dense_infer(
 
 
 __all__ = [
-    "binary_matmul",
-    "binary_dense_train",
     "binary_dense_infer",
+    "binary_dense_train",
+    "binary_matmul",
     "bitpack",
-    "bnn_matmul_packed",
     "bnn_matmul_mxu",
+    "bnn_matmul_packed",
     "pack_weights",
     "resolve_impl",
     "ste_sign",

@@ -4,9 +4,9 @@ Edge cases the train->deploy loop must survive: single-layer nets, sign ties
 at ``popcount == N/2`` (and latent weights exactly 0.0), and models whose
 compiled programs outgrow one switch and partition onto multi-hop fabrics.
 """
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import bnn

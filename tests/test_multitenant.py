@@ -1,0 +1,329 @@
+"""Multi-tenant switch scheduling: merging, time-slicing, admission, traffic.
+
+The load-bearing contract is per-tenant bit-exactness: for N >= 3 tenants on
+one mixed packet stream, each tenant's outputs must equal its own
+single-program run — through ``executor.execute``, the legacy interpreter,
+and the ``bnn.forward`` oracle — in both merged and time-sliced modes, under
+any stream chunking.  Merging relocates registers and concatenates element
+ranges; it must never change results.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bnn, compile_bnn
+from repro.core.interpreter import run_program
+from repro.core.pipeline import ChipSpec
+from repro.dataplane import (
+    AdmissionError,
+    SwitchScheduler,
+    TenantTrafficSpec,
+    execute,
+    mixed_tenant_generate,
+    mixed_tenant_stream,
+    traffic,
+)
+from repro.dataplane.multitenant import merge_lowered
+
+SHAPES = [(16, 8, 4), (32, 16), (8, 12, 6)]
+SPECS = [
+    TenantTrafficSpec("ddos_burst", 16, 3.0),
+    TenantTrafficSpec("flow_tuple", 32, 1.0),
+    TenantTrafficSpec("iot_telemetry", 8, 2.0),
+]
+BIG = ChipSpec(num_elements=256, name="bigchip")
+
+
+def _compiled(sizes, seed=0):
+    spec = bnn.BnnSpec(sizes)
+    params = bnn.init_params(spec, jax.random.PRNGKey(seed))
+    weights = [np.asarray(w) for w in params]
+    return params, compile_bnn(weights)
+
+
+@pytest.fixture(scope="module")
+def tenants3():
+    """3 compiled programs of different shapes + their oracle params."""
+    return [_compiled(s, seed=i) for i, s in enumerate(SHAPES)]
+
+
+def _scheduler(tenants3, **kw):
+    sched = SwitchScheduler(BIG, **kw)
+    for i, (spec, (_, prog)) in enumerate(zip(SPECS, tenants3)):
+        sched.admit(prog, name=f"t{i}", weight=spec.weight)
+    return sched
+
+
+# -- merging ------------------------------------------------------------------
+
+def test_merge_lowered_layout(tenants3):
+    lps = [prog.lower() for _, prog in tenants3]
+    mp = merge_lowered(lps, BIG)
+    # Element ranges tile the merged table in tenant order.
+    assert mp.element_ranges[0][0] == 0
+    assert mp.element_ranges[-1][1] == mp.lowered.num_elements
+    assert all(
+        a[1] == b[0] for a, b in zip(mp.element_ranges, mp.element_ranges[1:])
+    )
+    # Slot windows are disjoint and cover the shared file.
+    assert mp.slot_windows[0][0] == 0
+    assert all(
+        a[1] == b[0] for a, b in zip(mp.slot_windows, mp.slot_windows[1:])
+    )
+    assert mp.slot_windows[-1][1] == mp.lowered.num_slots
+    # The program-id column tags every element with its owner.
+    for t, (a, b) in enumerate(mp.element_ranges):
+        assert (mp.element_program[a:b] == t).all()
+    # No remapped row can address outside its window (or the shared null).
+    null = mp.lowered.null_slot
+    for t, ((a, b), (s0, s1)) in enumerate(
+        zip(mp.element_ranges, mp.slot_windows)
+    ):
+        for tbl in (mp.lowered.dst, mp.lowered.src0, mp.lowered.src1):
+            seg = tbl[a:b]
+            ok = ((seg >= s0) & (seg < s1)) | (seg == null)
+            assert ok.all()
+
+
+def test_merged_register_windows_reject_bad_fit(tenants3):
+    lp = tenants3[0][1].lower()
+    with pytest.raises(ValueError):
+        lp.with_slot_window(1, lp.num_slots)  # offset pushes past the file
+    with pytest.raises(ValueError):
+        lp.pad_rows(lp.max_rows - 1)
+
+
+# -- per-tenant bit-exactness (the acceptance criterion) ----------------------
+
+@pytest.mark.parametrize("mode", ["merged", "time_sliced"])
+def test_scheduler_bit_exact_per_tenant(tenants3, mode):
+    sched = _scheduler(tenants3)
+    n = 2000
+    tids, bits = mixed_tenant_generate(SPECS, n, seed=7)
+    res = sched.run(
+        mixed_tenant_stream(SPECS, n, chunk_size=300, seed=7),
+        mode=mode,
+        chunk_size=512,
+    )
+    assert res.mode == mode and res.packets == n
+    for t, (params, prog) in enumerate(tenants3):
+        mine = bits[tids == t][:, : prog.input_bits]
+        got = res.outputs_for(t)
+        want = execute(sched.tenants[t].lowered, mine, backend="jnp")
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(
+            got, np.asarray(run_program(prog, mine))
+        )
+        np.testing.assert_array_equal(
+            got, np.asarray(bnn.forward(params, np.asarray(mine)))
+        )
+        st = res.stats_for(t)
+        assert st.packets == st.served + st.dropped == mine.shape[0]
+        assert st.dropped == 0
+
+
+def test_scheduler_modes_agree_and_chunking_is_irrelevant(tenants3):
+    sched = _scheduler(tenants3)
+    n = 1500
+    merged = sched.run(
+        mixed_tenant_stream(SPECS, n, chunk_size=256, seed=3),
+        mode="merged",
+        chunk_size=128,
+    )
+    sliced = sched.run(
+        mixed_tenant_generate(SPECS, n, seed=3),  # one-shot pair, no chunks
+        mode="time_sliced",
+    )
+    for t in range(3):
+        np.testing.assert_array_equal(
+            merged.outputs_for(t), sliced.outputs_for(t)
+        )
+
+
+def test_scheduler_merged_pallas_backend_matches(tenants3):
+    sched = _scheduler(tenants3)
+    n = 300
+    pair = mixed_tenant_generate(SPECS, n, seed=9)
+    want = sched.run(pair, mode="merged", backend="jnp", chunk_size=128)
+    got = sched.run(
+        pair, mode="merged", backend="pallas", interpret=True, chunk_size=128
+    )
+    for t in range(3):
+        np.testing.assert_array_equal(got.outputs_for(t), want.outputs_for(t))
+
+
+# -- admission ----------------------------------------------------------------
+
+def test_admission_rejects_oversized_program(tenants3):
+    _, prog = tenants3[0]
+    with pytest.raises(AdmissionError, match="elements"):
+        SwitchScheduler(ChipSpec(num_elements=prog.num_elements - 1)).admit(
+            prog
+        )
+    tiny_phv = ChipSpec(num_elements=256, phv_bits=prog.peak_phv_bits - 1)
+    with pytest.raises(AdmissionError, match="PHV"):
+        SwitchScheduler(tiny_phv).admit(prog)
+
+
+def test_admission_forced_merged_rejects_overflow_auto_falls_back(tenants3):
+    _, a = tenants3[0]
+    _, b = tenants3[2]
+    chip = ChipSpec(num_elements=a.num_elements + b.num_elements - 1)
+    forced = SwitchScheduler(chip, mode="merged")
+    forced.admit(a)
+    with pytest.raises(AdmissionError, match="merged footprint"):
+        forced.admit(b)
+    auto = SwitchScheduler(chip, mode="auto")
+    auto.admit(a)
+    auto.admit(b)
+    assert auto.resolve_mode() == "time_sliced"
+    with pytest.raises(ValueError, match="time-slice|time_sliced"):
+        auto.run(mixed_tenant_generate(SPECS[:2], 64, seed=0), mode="merged")
+
+
+def test_scheduler_requires_tenants_and_validates_ids(tenants3):
+    with pytest.raises(ValueError, match="no tenants"):
+        SwitchScheduler(BIG).run((np.zeros(4, np.int32), np.zeros((4, 8))))
+    sched = _scheduler(tenants3)
+    bad = (np.array([0, 7], np.int32), np.zeros((2, 32), np.int32))
+    with pytest.raises(ValueError, match="tenant ids"):
+        sched.run(bad, mode="merged", chunk_size=64)
+
+
+# -- time-slicing policy ------------------------------------------------------
+
+def test_time_sliced_drops_at_queue_capacity_and_conserves(tenants3):
+    sched = _scheduler(tenants3, max_queue=200, quantum=128)
+    n = 3000
+    res = sched.run(
+        mixed_tenant_stream(SPECS, n, chunk_size=1000, seed=7),
+        mode="time_sliced",
+    )
+    assert sum(st.dropped for st in res.tenants) > 0
+    for t, (_, prog) in enumerate(tenants3):
+        st = res.stats_for(t)
+        assert st.packets == st.served + st.dropped  # conservation
+        assert res.outputs_for(t).shape == (st.served, prog.output_bits)
+    assert res.packets == n
+
+
+def test_time_sliced_weighted_quanta_and_deferral(tenants3):
+    sched = _scheduler(tenants3, quantum=256)
+    # Heaviest tenant (weight 3) gets the full quantum per turn; the others
+    # proportionally fewer.
+    assert sched._quanta() == [256, max(1, round(256 / 3)), round(256 * 2 / 3)]
+    res = sched.run(
+        mixed_tenant_stream(SPECS, 4000, chunk_size=2000, seed=1),
+        mode="time_sliced",
+    )
+    # Arrival bursts far exceed every quantum: backlog must defer, and the
+    # chip must alternate (every tenant gets multiple slices).
+    assert all(st.deferred > 0 for st in res.tenants)
+    assert all(st.slices >= 2 for st in res.tenants)
+
+
+# -- telemetry ----------------------------------------------------------------
+
+def test_multitenant_telemetry_rollup(tenants3):
+    sched = _scheduler(tenants3)
+    n = 1000
+    res = sched.run(
+        mixed_tenant_stream(SPECS, n, chunk_size=250, seed=5),
+        mode="merged",
+        chunk_size=256,
+    )
+    tel = sched.telemetry(res)
+    assert tel.mode == "merged"
+    assert tel.total_packets == n and tel.total_dropped == 0
+    assert tel.elements_used == sum(p.num_elements for _, p in tenants3)
+    assert tel.elements_available == BIG.num_elements
+    weights = [t.weight for t in tel.tenants]
+    assert weights == [3.0, 1.0, 2.0]
+    for t in tel.tenants:
+        # Merged mode: every tenant rides the full line rate.
+        assert t.analytic_pps == BIG.packets_per_second
+        assert t.peak_occupancy_bits > 0
+        assert 0 < t.peak_alu_utilization <= 1.0
+        assert t.measured_pps is not None and t.measured_pps > 0
+    text = tel.render()
+    assert "merged" in text and "tenants=3" in text
+
+    sliced = sched.run(
+        mixed_tenant_generate(SPECS, 500, seed=5), mode="time_sliced"
+    )
+    tel2 = sched.telemetry(sliced)
+    total_w = sum(weights)
+    for t, w in zip(tel2.tenants, weights):
+        assert t.analytic_pps == pytest.approx(
+            BIG.packets_per_second * w / total_w
+        )
+
+
+def test_telemetry_tolerates_tenant_admitted_after_run(tenants3):
+    sched = SwitchScheduler(BIG)
+    sched.admit(tenants3[0][1], weight=1.0)
+    sched.admit(tenants3[1][1], weight=1.0)
+    sched.run(mixed_tenant_generate(SPECS[:2], 200, seed=2), chunk_size=128)
+    late = sched.admit(tenants3[2][1], name="late", weight=1.0)
+    tel = sched.telemetry()  # must not fail on the run-less tenant
+    row = tel.tenants[late.tid]
+    assert row.name == "late" and row.packets == 0
+    assert row.measured_pps is None
+    assert tel.total_packets == 200
+
+
+def test_fabric_analytic_report_is_memoized(tenants3):
+    from repro.dataplane import SwitchFabric
+
+    _, prog = tenants3[0]
+    fab = SwitchFabric.partition(prog, chip=ChipSpec(num_elements=8))
+    assert fab.analytic_report() is fab.analytic_report()
+    # Recirculation accounting: passes == hop count, rate divides by it.
+    recirc = SwitchFabric.partition(
+        prog, mode="recirculate", chip=ChipSpec(num_elements=8)
+    )
+    rep = recirc.analytic_report()
+    assert rep.passes == recirc.num_hops
+    assert rep.packets_per_second == pytest.approx(
+        recirc.chip.packets_per_second / recirc.num_hops
+    )
+
+
+# -- mixed-tenant traffic -----------------------------------------------------
+
+def test_mixed_traffic_shapes_weights_and_padding():
+    n = 4000
+    tids, bits = mixed_tenant_generate(SPECS, n, seed=11)
+    assert tids.shape == (n,) and tids.dtype == np.int32
+    assert bits.shape == (n, 32) and bits.dtype == np.int32
+    assert set(np.unique(bits)) <= {0, 1}
+    # Width padding beyond a tenant's input_bits is zero.
+    for t, spec in enumerate(SPECS):
+        assert (bits[tids == t][:, spec.input_bits :] == 0).all()
+    # Arrival shares track the weights (3:1:2 over 4000 draws).
+    counts = np.bincount(tids, minlength=3) / n
+    np.testing.assert_allclose(counts, [0.5, 1 / 6, 1 / 3], atol=0.05)
+
+
+def test_mixed_traffic_tenant_subsequence_is_its_scenario_stream():
+    tids, bits = mixed_tenant_generate(SPECS, 2000, seed=7)
+    for t, spec in enumerate(SPECS):
+        mine = bits[tids == t][:, : spec.input_bits]
+        ref = traffic.generate(
+            spec.scenario,
+            mine.shape[0],
+            spec.input_bits,
+            seed=traffic.tenant_stream_seed(7, t),
+        )
+        np.testing.assert_array_equal(mine, ref)
+
+
+def test_mixed_traffic_validation():
+    with pytest.raises(ValueError):
+        list(mixed_tenant_stream([], 10, chunk_size=4))
+    with pytest.raises(KeyError):
+        TenantTrafficSpec("nope", 8)
+    with pytest.raises(ValueError):
+        TenantTrafficSpec("uniform_random", 8, weight=0.0)
+    with pytest.raises(ValueError):
+        TenantTrafficSpec("uniform_random", 0)

@@ -1,0 +1,175 @@
+"""CI benchmark regression gate.
+
+Compares the ``BENCH_<module>.json`` files ``benchmarks/run.py`` emits
+against a committed baseline (``benchmarks/baseline.json``) and exits
+non-zero when a tracked metric regresses by more than the threshold
+(default 30%, per-side: throughput metrics may not *drop* past it, latency
+metrics may not *rise* past it).
+
+Tracked metrics (chosen to be meaningful at CI smoke budgets):
+
+* every ``pps`` / ``steps_per_s`` value in a row's derived column
+  (higher is better) — executor, fabric, scheduler, and trainer rates;
+* ``bnn_export``'s ``us_per_call`` (lower is better) — end-to-end export
+  latency, the control-plane cost of pushing a model to the switch.
+
+The baseline records the budget env (``DATAPLANE_BENCH_PACKETS`` etc.) it
+was generated under; CI must run the benchmarks with the same budgets or
+the comparison is meaningless — the gate fails loudly on a budget mismatch.
+
+Usage:
+    python tools/check_bench_regression.py [--bench-dir DIR]
+        [--baseline FILE] [--threshold 0.30] [--update]
+
+``--update`` refreshes the baseline from the current BENCH files instead of
+checking (run it on the CI reference machine, commit the result).
+``BENCH_REGRESSION_THRESHOLD`` overrides the threshold from the environment.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+HIGHER_IS_BETTER_KEYS = ("pps", "steps_per_s")
+LATENCY_ROWS = ("bnn_export",)
+BUDGET_ENV = (
+    "DATAPLANE_BENCH_PACKETS",
+    "TRAIN_DEPLOY_BENCH_STEPS",
+    "MULTITENANT_BENCH_TENANTS",
+    "MULTITENANT_BENCH_PACKETS",
+)
+
+
+def collect_metrics(bench_dir: str) -> dict[str, dict]:
+    """Flatten BENCH_*.json rows into ``{metric_name: {value, higher}}``."""
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    if not paths:
+        raise FileNotFoundError(
+            f"no BENCH_*.json under {bench_dir!r}; run "
+            "`python -m benchmarks.run` first"
+        )
+    metrics: dict[str, dict] = {}
+    for path in paths:
+        with open(path) as fh:
+            payload = json.load(fh)
+        for row in payload["rows"]:
+            for key in HIGHER_IS_BETTER_KEYS:
+                val = row["metrics"].get(key)
+                if val is not None and math.isfinite(val) and val > 0:
+                    metrics[f"{row['name']}.{key}"] = {
+                        "value": val,
+                        "higher_is_better": True,
+                    }
+            if row["name"] in LATENCY_ROWS and math.isfinite(
+                row["us_per_call"]
+            ):
+                metrics[f"{row['name']}.us_per_call"] = {
+                    "value": row["us_per_call"],
+                    "higher_is_better": False,
+                }
+    return metrics
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default=".")
+    ap.add_argument(
+        "--baseline",
+        default=os.path.join("benchmarks", "baseline.json"),
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=float(os.environ.get("BENCH_REGRESSION_THRESHOLD", 0.30)),
+        help="max fractional regression (0.30 = 30%%)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the current BENCH files",
+    )
+    args = ap.parse_args()
+
+    current = collect_metrics(args.bench_dir)
+    budgets = {k: os.environ.get(k) for k in BUDGET_ENV}
+
+    if args.update:
+        payload = {
+            "comment": (
+                "Benchmark baseline for tools/check_bench_regression.py. "
+                "Regenerate with: python tools/check_bench_regression.py "
+                "--update (after python -m benchmarks.run under the SAME "
+                "budget env)."
+            ),
+            "budget_env": budgets,
+            "metrics": {
+                k: current[k] for k in sorted(current)
+            },
+        }
+        with open(args.baseline, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(
+            f"baseline updated: {args.baseline} ({len(current)} metrics)"
+        )
+        return 0
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    base_budgets = baseline.get("budget_env", {})
+    mismatched = {
+        k: (base_budgets.get(k), budgets.get(k))
+        for k in BUDGET_ENV
+        if base_budgets.get(k) != budgets.get(k)
+    }
+    if mismatched:
+        print(
+            "FAIL: benchmark budgets differ from the baseline's — rates are "
+            "not comparable:"
+        )
+        for k, (want, got) in mismatched.items():
+            print(f"  {k}: baseline={want!r} current={got!r}")
+        return 1
+
+    failures = 0
+    missing = 0
+    print(
+        f"bench regression gate: threshold {args.threshold:.0%}, "
+        f"{len(baseline['metrics'])} baseline metrics"
+    )
+    for name, ref in sorted(baseline["metrics"].items()):
+        cur = current.get(name)
+        if cur is None:
+            missing += 1
+            print(f"  MISSING {name} (baseline {ref['value']:.4g})")
+            continue
+        base_val, cur_val = ref["value"], cur["value"]
+        if ref["higher_is_better"]:
+            change = (cur_val - base_val) / base_val
+            bad = cur_val < base_val * (1.0 - args.threshold)
+        else:
+            change = (base_val - cur_val) / base_val
+            bad = cur_val > base_val * (1.0 + args.threshold)
+        status = "FAIL" if bad else "ok"
+        if bad:
+            failures += 1
+        print(
+            f"  {status:>4} {name}: {cur_val:.4g} vs {base_val:.4g} "
+            f"({change:+.1%})"
+        )
+    if missing:
+        print(f"FAIL: {missing} baseline metric(s) missing from this run")
+    if failures:
+        print(f"FAIL: {failures} metric(s) regressed > {args.threshold:.0%}")
+    if failures or missing:
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""Stdlib import-order / ``__all__`` consistency lint (stdlib-only, CI).
+
+Checks every ``.py`` file under src/, tests/, benchmarks/, tools/, and
+examples/:
+
+1. **Import grouping** — in a module's leading import block (top-level
+   imports before the first non-import statement), groups must appear in
+   ``__future__`` -> stdlib -> third-party -> first-party order; within a
+   group, plain ``import x`` statements come before ``from x import y``
+   statements and each kind is alphabetically sorted by module name (the
+   isort "straight then from" convention the codebase follows).
+2. **__all__ consistency** — when a module defines a top-level ``__all__``
+   list/tuple of string literals: entries must be unique, sorted, and every
+   named symbol must actually be bound at module top level.
+
+Exits non-zero listing each violation as ``path:line: message``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+ROOTS = ("src", "tests", "benchmarks", "tools", "examples")
+THIRD_PARTY = {"jax", "jaxlib", "numpy", "pytest", "hypothesis"}
+FIRST_PARTY = {
+    "repro",
+    "benchmarks",
+    "tests",
+    "tools",
+    "examples",
+    "conftest",          # tests' local plugin module
+    "_hypothesis_stub",  # tests' hypothesis fallback
+}
+GROUP_NAMES = ("__future__", "stdlib", "third-party", "first-party")
+
+
+def module_group(name: str) -> int:
+    root = name.split(".")[0]
+    if root == "__future__":
+        return 0
+    if root in FIRST_PARTY:
+        return 3
+    if root in THIRD_PARTY:
+        return 2
+    if root in sys.stdlib_module_names:
+        return 1
+    return 2  # unknown: assume an external dependency
+
+
+def stmt_module(node: ast.stmt) -> str:
+    if isinstance(node, ast.Import):
+        return node.names[0].name
+    assert isinstance(node, ast.ImportFrom)
+    return node.module or "." * node.level
+
+
+def check_import_block(path: str, tree: ast.Module) -> list[str]:
+    leading: list[ast.stmt] = []
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            leading.append(node)
+        elif isinstance(node, ast.Expr) and isinstance(
+            node.value, ast.Constant
+        ):
+            continue  # docstring
+        else:
+            break
+    errors = []
+    prev_group = -1
+    prev_kind = 0   # 0 = plain import, 1 = from-import
+    prev_name: str | None = None
+    for node in leading:
+        name = stmt_module(node)
+        group = module_group(name)
+        kind = 1 if isinstance(node, ast.ImportFrom) else 0
+        if group < prev_group:
+            errors.append(
+                f"{path}:{node.lineno}: {GROUP_NAMES[group]} import "
+                f"{name!r} after a {GROUP_NAMES[prev_group]} import"
+            )
+        elif group == prev_group:
+            if kind < prev_kind:
+                errors.append(
+                    f"{path}:{node.lineno}: plain import {name!r} after a "
+                    "from-import of the same group"
+                )
+            elif kind == prev_kind and prev_name is not None:
+                if name.lower() < prev_name.lower():
+                    errors.append(
+                        f"{path}:{node.lineno}: import {name!r} not "
+                        f"alphabetically after {prev_name!r}"
+                    )
+        prev_group, prev_kind, prev_name = group, kind, name
+    return errors
+
+
+def top_level_bindings(tree: ast.Module) -> set[str]:
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                names.add(alias.asname or alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                names.add(alias.asname or alias.name)
+        elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for tgt in targets:
+                for leaf in ast.walk(tgt):
+                    if isinstance(leaf, ast.Name):
+                        names.add(leaf.id)
+        elif isinstance(node, (ast.If, ast.Try)):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name) and isinstance(
+                    sub.ctx, ast.Store
+                ):
+                    names.add(sub.id)
+                elif isinstance(sub, (ast.Import, ast.ImportFrom)):
+                    for alias in sub.names:
+                        names.add(alias.asname or alias.name.split(".")[0])
+                elif isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+                ):
+                    names.add(sub.name)
+    return names
+
+
+def check_all(path: str, tree: ast.Module) -> list[str]:
+    errors = []
+    for node in tree.body:
+        if not (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == "__all__"
+        ):
+            continue
+        if not isinstance(node.value, (ast.List, ast.Tuple)):
+            continue
+        entries = []
+        for elt in node.value.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                entries.append(elt.value)
+            else:
+                errors.append(
+                    f"{path}:{node.lineno}: __all__ entry is not a string "
+                    "literal"
+                )
+                return errors
+        if len(set(entries)) != len(entries):
+            dupes = sorted({e for e in entries if entries.count(e) > 1})
+            errors.append(
+                f"{path}:{node.lineno}: duplicate __all__ entries: {dupes}"
+            )
+        if entries != sorted(entries):
+            errors.append(f"{path}:{node.lineno}: __all__ is not sorted")
+        bound = top_level_bindings(tree)
+        for name in entries:
+            if name not in bound:
+                errors.append(
+                    f"{path}:{node.lineno}: __all__ names {name!r} which is "
+                    "not bound at module top level"
+                )
+    return errors
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    errors: list[str] = []
+    checked = 0
+    for root in ROOTS:
+        base = os.path.join(repo, root)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _, files in os.walk(base):
+            for fname in sorted(files):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, repo)
+                with open(path, "r", encoding="utf-8") as fh:
+                    try:
+                        tree = ast.parse(fh.read(), filename=rel)
+                    except SyntaxError as e:
+                        errors.append(f"{rel}:{e.lineno}: syntax error: {e.msg}")
+                        continue
+                checked += 1
+                errors.extend(check_import_block(rel, tree))
+                errors.extend(check_all(rel, tree))
+    for err in errors:
+        print(err)
+    print(
+        f"import/__all__ lint: {checked} files, {len(errors)} violation(s)"
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
