@@ -1,0 +1,78 @@
+"""Pcap ingestion benchmark: capture write/read and featurizer throughput.
+
+The featurizer (``dataplane.pcap.parse_headers`` + ``featurize``) is the
+hot path between a capture file and the executor's activation bits — it
+must keep up with the fused executor's packet rates, so its pkts/s is gated
+against the baseline alongside them.  The readers/writers are control-plane
+(run once per capture), but their rates are pinned too so a quadratic-copy
+regression can't hide.
+
+Workload: ``PCAP_BENCH_PACKETS`` packets (default 200k; CI smoke sets it
+small) of the deterministic two-class synthetic trace, serialized and
+re-read in both formats, then featurized at the full 136-bit layout folded
+to 64 model input bits.  ``us_per_call`` is microseconds per whole-capture
+operation.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.dataplane import pcap
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def rows() -> list[tuple[str, float, str]]:
+    n = int(os.environ.get("PCAP_BENCH_PACKETS", 200_000))
+    packets, ts, labels = pcap.synthesize_capture(n, seed=0)
+
+    raw, w_s = _timed(lambda: pcap.write_pcap(packets, ts))
+    raw_ng, wng_s = _timed(lambda: pcap.write_pcapng(packets, ts))
+    cap, r_s = _timed(lambda: pcap.read_pcap(raw))
+    cap_ng, rng_s = _timed(lambda: pcap.read_pcap(raw_ng))
+    assert cap.num_packets == cap_ng.num_packets == n
+
+    # Warm once (numpy allocator, log tables), then time the hot path.
+    pcap.featurize(cap, 64)
+    bits, f_s = _timed(lambda: pcap.featurize(cap, 64))
+    assert bits.shape == (n, 64)
+
+    return [
+        (
+            "pcap_write",
+            1e6 * w_s,
+            f"pps={n / w_s:.3e} bytes={len(raw)} packets={n}",
+        ),
+        (
+            "pcap_write_pcapng",
+            1e6 * wng_s,
+            f"pps={n / wng_s:.3e} bytes={len(raw_ng)} packets={n}",
+        ),
+        (
+            "pcap_read",
+            1e6 * r_s,
+            f"pps={n / r_s:.3e} packets={n}",
+        ),
+        (
+            "pcap_read_pcapng",
+            1e6 * rng_s,
+            f"pps={n / rng_s:.3e} packets={n}",
+        ),
+        (
+            "pcap_featurize",
+            1e6 * f_s,
+            f"pps={n / f_s:.3e} packets={n} feature_bits="
+            f"{pcap.PCAP_FEATURE_BITS} folded_bits=64 "
+            f"flood_share={labels.mean():.2f}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.2f},{derived}")

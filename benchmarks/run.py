@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV:
   * multitenant_bench — aggregate pkts/s vs tenant count, merged vs
                         time-sliced scheduling (MULTITENANT_BENCH_TENANTS /
                         MULTITENANT_BENCH_PACKETS tune)
+  * pcap_bench        — capture write/read + header-featurizer throughput
+                        (PCAP_BENCH_PACKETS tunes the capture size)
 
 Besides the CSV, each module's rows land in ``BENCH_<module>.json`` (in
 ``BENCH_OUT_DIR``, default cwd) with every ``key=<float>`` pair from the
@@ -70,6 +72,7 @@ def main() -> None:
         dataplane_bench,
         kernel_bench,
         multitenant_bench,
+        pcap_bench,
         popcnt_ablation,
         roofline_summary,
         table1_elements,
@@ -88,6 +91,7 @@ def main() -> None:
         dataplane_bench,
         train_deploy_bench,
         multitenant_bench,
+        pcap_bench,
     ]
     failures = 0
     timings: list[tuple[str, float, bool]] = []

@@ -3,16 +3,18 @@
 Line-rate simulation layer over the N2Net core: programs are lowered to
 dense op-tables (``lowering``), executed fused and batched (``executor``,
 with a Pallas kernel in ``kernels.optable_exec``), fed from a traffic
-scenario library (``traffic``), scaled past one chip's element budget by a
-simulated multi-switch fabric with per-stage telemetry (``fabric``,
-``telemetry``), and shared between independently compiled programs by a
-multi-tenant scheduler (``multitenant``).
+scenario library (``traffic``) or from real capture files (``pcap``),
+scaled past one chip's element budget by a simulated multi-switch fabric
+with per-stage telemetry (``fabric``, ``telemetry``), and shared between
+independently compiled programs by a multi-tenant scheduler
+(``multitenant``).
 """
 from repro.dataplane import (
     executor,
     fabric,
     lowering,
     multitenant,
+    pcap,
     telemetry,
     traffic,
 )
@@ -24,6 +26,17 @@ from repro.dataplane.multitenant import (
     SCHEDULER_MODES,
     SwitchScheduler,
 )
+from repro.dataplane.pcap import (
+    Capture,
+    PcapFormatError,
+    featurize,
+    parse_headers,
+    read_pcap,
+    register_pcap_scenario,
+    synthesize_capture,
+    write_pcap,
+    write_pcapng,
+)
 from repro.dataplane.telemetry import FabricTelemetry, stage_telemetry
 from repro.dataplane.traffic import (
     SCENARIOS,
@@ -32,15 +45,18 @@ from repro.dataplane.traffic import (
     get_scenario,
     mixed_tenant_generate,
     mixed_tenant_stream,
+    register_scenario,
     stream,
 )
 
 __all__ = [
     "AdmissionError",
+    "Capture",
     "DEFAULT_CHUNK",
     "FabricTelemetry",
     "LoweredProgram",
     "MODES",
+    "PcapFormatError",
     "SCENARIOS",
     "SCHEDULER_MODES",
     "SwitchFabric",
@@ -50,6 +66,7 @@ __all__ = [
     "execute_stream",
     "executor",
     "fabric",
+    "featurize",
     "generate",
     "get_scenario",
     "lower_program",
@@ -57,8 +74,16 @@ __all__ = [
     "mixed_tenant_generate",
     "mixed_tenant_stream",
     "multitenant",
+    "parse_headers",
+    "pcap",
+    "read_pcap",
+    "register_pcap_scenario",
+    "register_scenario",
     "stage_telemetry",
     "stream",
+    "synthesize_capture",
     "telemetry",
     "traffic",
+    "write_pcap",
+    "write_pcapng",
 ]

@@ -15,6 +15,11 @@ the workloads the in-network-NN literature actually classifies:
   (decision-boundary robustness probes).
 * ``uniform_random`` — i.i.d. fair coin bits (the null workload).
 
+Beyond the built-in synthetic five, :func:`register_scenario` admits new
+scenarios at runtime — ``dataplane.pcap`` uses it to register *captured*
+traffic (pcap/pcapng files featurized to activation bits) under the same
+contract; see ``docs/TRAFFIC.md``.
+
 A scenario is a ``setup`` (draw the trace's persistent world: flow pool,
 attacker signature, device fleet) plus an ``emit`` over an absolute packet
 range.  :func:`stream` runs setup **once** and emits successive ranges, so a
@@ -72,6 +77,8 @@ def _fold_bits(bits: np.ndarray, width: int) -> np.ndarray:
     input width.
     """
     n, k = bits.shape
+    if n == 0:
+        return np.zeros((0, width), np.int32)
     if k < width:
         reps = -(-width // k)
         bits = np.tile(bits, (1, reps))
@@ -81,15 +88,19 @@ def _fold_bits(bits: np.ndarray, width: int) -> np.ndarray:
     pad = (-k) % width
     if pad:
         bits = np.concatenate([bits, np.zeros((n, pad), bits.dtype)], axis=1)
-    return (
-        bits.reshape(n, -1, width).sum(axis=1) % 2
-    ).astype(np.int32)
+    # XOR-reduce == per-column parity of the sum for {0,1} entries, at a
+    # fraction of the cost (this is the pcap featurizer's hot loop too).
+    return np.bitwise_xor.reduce(
+        bits.reshape(n, -1, width).astype(np.int32), axis=1
+    )
 
 
 def _int_bits(vals: np.ndarray, width: int) -> np.ndarray:
     """(n,) unsigned ints -> (n, width) little-endian bits."""
-    shifts = np.arange(width, dtype=np.uint64)
-    return ((vals[:, None].astype(np.uint64) >> shifts) & 1).astype(np.int32)
+    # uint32 math is exact for the bits we keep (<= 32) and much faster.
+    dtype = np.uint32 if width <= 32 else np.uint64
+    shifts = np.arange(width, dtype=dtype)
+    return ((vals[:, None].astype(dtype) >> shifts) & 1).astype(np.int32)
 
 
 def _gray(vals: np.ndarray) -> np.ndarray:
@@ -301,6 +312,22 @@ def get_scenario(name: str) -> Scenario:
         raise KeyError(
             f"unknown scenario {name!r}; have {sorted(SCENARIOS)}"
         ) from None
+
+
+def register_scenario(scenario: Scenario, *, overwrite: bool = False) -> Scenario:
+    """Add a scenario to :data:`SCENARIOS` (e.g. a pcap-backed one from
+    ``dataplane.pcap``), making it usable everywhere a scenario name is —
+    ``generate``/``stream``, trainer tasks, and mixed-tenant specs.
+    Registering a different scenario under an existing name requires
+    ``overwrite=True``; re-registering the same object is a no-op."""
+    existing = SCENARIOS.get(scenario.name)
+    if existing is not None and existing is not scenario and not overwrite:
+        raise ValueError(
+            f"scenario {scenario.name!r} is already registered; pass "
+            "overwrite=True to replace it"
+        )
+    SCENARIOS[scenario.name] = scenario
+    return scenario
 
 
 def generate(name: str, n: int, input_bits: int, seed: int = 0) -> np.ndarray:

@@ -18,6 +18,14 @@ act on (drop/mirror/mark).  Scaling beyond one output bit means one-vs-all
 heads; the deployed artifact acts on bits, so the trainer keeps the deploy
 semantics honest by training exactly what the switch executes.
 
+Real traces fit the same mold: :func:`make_capture_task` temporal-splits any
+labeled activation-bit trace — e.g. a pcap capture featurized by
+``dataplane.pcap.featurize`` and labeled through ``dataplane.pcap
+.label_packets`` — into the trainer's task tuple, and
+:class:`BnnTrainer` accepts that tuple via its ``task`` argument in place
+of the synthetic-scenario default (``examples/pcap_replay.py`` closes the
+loop capture -> train -> switch).
+
 Checkpointing follows ``train/trainer.py`` conventions: atomic
 ``train.checkpoint`` bundles of ``{"latent", "opt"}`` plus step extras, with
 restore-latest resume.  Batch order is ``(seed, step)``-deterministic, so a
@@ -129,6 +137,51 @@ def make_traffic_task(
     return train[0], train[1], held[0], held[1]
 
 
+def make_capture_task(
+    bits: np.ndarray,
+    labels: np.ndarray,
+    *,
+    train_frac: float = 0.8,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """A trainer task from one labeled packet trace (e.g. a featurized pcap).
+
+    The split is *temporal*, matching :func:`make_traffic_task` and real
+    capture-then-deploy practice: the first ``train_frac`` of the trace (in
+    arrival order) trains — shuffled for SGD — and the rest is held out in
+    arrival order, so evaluation replays the unseen tail of the capture.
+
+    ``bits`` is ``(n, input_bits)`` int {0,1} (``dataplane.pcap.featurize``
+    output), ``labels`` ``(n,)`` binary ints (``dataplane.pcap
+    .label_packets`` output, or ground truth).  Returns ``(train_x,
+    train_y, eval_x, eval_y)`` for :class:`BnnTrainer`'s ``task`` argument.
+    """
+    bits = np.asarray(bits, np.int32)
+    labels = np.asarray(labels, np.int32)
+    if bits.ndim != 2 or labels.shape != (bits.shape[0],):
+        raise ValueError(
+            f"need (n, input_bits) bits and (n,) labels, got {bits.shape} "
+            f"and {labels.shape}"
+        )
+    if not np.isin(bits, (0, 1)).all():
+        raise ValueError("bits must be {0,1}")
+    if not np.isin(labels, (0, 1)).all():
+        raise ValueError(
+            "labels must be binary {0,1}; the deployed switch acts on the "
+            "single output bit"
+        )
+    if not 0.0 < train_frac < 1.0:
+        raise ValueError(f"train_frac must be in (0, 1), got {train_frac}")
+    k = int(round(train_frac * bits.shape[0]))
+    if k == 0 or k == bits.shape[0]:
+        raise ValueError(
+            f"trace of {bits.shape[0]} packets leaves an empty split at "
+            f"train_frac={train_frac}"
+        )
+    perm = np.random.default_rng((seed, 2)).permutation(k)
+    return bits[:k][perm], labels[:k][perm], bits[k:], labels[k:]
+
+
 # ---------------------------------------------------------------------------
 # Trainer
 # ---------------------------------------------------------------------------
@@ -166,9 +219,15 @@ class BnnTrainConfig:
 
 
 class BnnTrainer:
-    """Train a BNN on traffic, then export it into the dataplane fabric."""
+    """Train a BNN on traffic, then export it into the dataplane fabric.
 
-    def __init__(self, cfg: BnnTrainConfig):
+    By default the task is synthesized from ``cfg.scenarios`` via
+    :func:`make_traffic_task`; pass ``task`` (a ``(train_x, train_y,
+    eval_x, eval_y)`` tuple, e.g. from :func:`make_capture_task` over a
+    featurized pcap) to train on an external trace instead.
+    """
+
+    def __init__(self, cfg: BnnTrainConfig, task=None):
         self.cfg = cfg
         self.spec = BnnSpec(cfg.layer_sizes)
         self.latent = init_latent(self.spec, jax.random.PRNGKey(cfg.seed))
@@ -178,15 +237,37 @@ class BnnTrainer:
         self.opt_state = self.optimizer.init(self.latent)
         self.step = 0
         self.history: list[dict] = []
-        (self._train_x, self._train_y, self.eval_x, self.eval_y) = (
-            make_traffic_task(
+        if task is None:
+            task = make_traffic_task(
                 cfg.scenarios,
                 cfg.train_packets_per_class,
                 self.spec.input_bits,
                 seed=cfg.seed,
                 eval_per_class=cfg.eval_packets_per_class,
             )
-        )
+        else:
+            if len(task) != 4:
+                raise ValueError(
+                    "task must be (train_x, train_y, eval_x, eval_y), got "
+                    f"{len(task)} items"
+                )
+            task = tuple(np.asarray(a) for a in task)
+            for xs, ys, part in (
+                (task[0], task[1], "train"),
+                (task[2], task[3], "eval"),
+            ):
+                if xs.ndim != 2 or xs.shape[1] != self.spec.input_bits:
+                    raise ValueError(
+                        f"task {part}_x must be (n, {self.spec.input_bits}) "
+                        f"to match layer_sizes {cfg.layer_sizes}, got "
+                        f"{xs.shape}"
+                    )
+                if ys.shape != (xs.shape[0],):
+                    raise ValueError(
+                        f"task {part}_y shape {ys.shape} does not match "
+                        f"{part}_x's {xs.shape[0]} packets"
+                    )
+        (self._train_x, self._train_y, self.eval_x, self.eval_y) = task
         self._step_fn = jax.jit(self._train_step)
         self._bits_fn = jax.jit(forward_bits)
 

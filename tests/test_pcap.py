@@ -1,0 +1,473 @@
+"""Pcap ingestion: reader/writer round trips, featurizer exactness, the
+scenario chunking-invariance contract, and the capture -> trainer hook.
+
+The load-bearing contracts: (1) write -> read reproduces capture bytes
+exactly in both formats and every magic variant, and malformed input raises
+instead of silently dropping packets; (2) the featurizer's bit encodings
+match the documented layout bit-for-bit; (3) a registered pcap scenario is
+chunking-invariant exactly like the five synthetic scenarios, so every
+consumer (streams, trainer tasks, mixed-tenant serving) can replay captures
+under any chunking.
+"""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.dataplane import pcap, traffic
+from repro.dataplane.pcap import PcapFormatError
+
+
+def _capture(n=256, seed=0):
+    pkts, ts, labels = pcap.synthesize_capture(n, seed=seed)
+    return pkts, ts, labels
+
+
+# -- writers/readers ---------------------------------------------------------
+
+@pytest.mark.parametrize("endian", ["<", ">"])
+@pytest.mark.parametrize("nanosecond", [False, True])
+def test_classic_round_trip(endian, nanosecond):
+    pkts, ts, _ = _capture(200)
+    raw = pcap.write_pcap(pkts, ts, endian=endian, nanosecond=nanosecond)
+    cap = pcap.read_pcap(raw)
+    assert cap.fmt == "pcap"
+    assert cap.linktype == pcap.LINKTYPE_ETHERNET
+    assert cap.packets() == pkts
+    atol = 2e-9 if nanosecond else 1e-6
+    np.testing.assert_allclose(cap.timestamps, ts, atol=atol)
+
+
+@pytest.mark.parametrize("endian", ["<", ">"])
+def test_pcapng_round_trip(endian):
+    pkts, ts, _ = _capture(200)
+    raw = pcap.write_pcapng(pkts, ts, endian=endian)
+    cap = pcap.read_pcap(raw)
+    assert cap.fmt == "pcapng"
+    assert cap.packets() == pkts
+    np.testing.assert_allclose(cap.timestamps, ts, atol=1e-6)
+
+
+def test_round_trip_via_files(tmp_path):
+    pkts, ts, _ = _capture(64)
+    p1 = tmp_path / "t.pcap"
+    p2 = tmp_path / "t.pcapng"
+    pcap.write_pcap(pkts, ts, path=p1)
+    pcap.write_pcapng(pkts, ts, path=p2)
+    assert pcap.read_pcap(p1).packets() == pkts
+    assert pcap.read_pcap(p2).packets() == pkts
+
+
+def test_writers_declare_snaplen_covering_jumbo_packets():
+    # caplen > declared snaplen reads as corruption to libpcap tools; a
+    # jumbo packet must raise the declared snaplen in both formats.
+    jumbo = _tcp_packet() + b"\x00" * 70000
+    raw = pcap.write_pcap([jumbo], [0.0])
+    assert struct.unpack_from("<I", raw, 16)[0] >= len(jumbo)  # snaplen
+    assert pcap.read_pcap(raw).packets() == [jumbo]
+    raw_ng = pcap.write_pcapng([jumbo], [0.0])
+    assert struct.unpack_from("<I", raw_ng, 28 + 12)[0] >= len(jumbo)
+    assert pcap.read_pcap(raw_ng).packets() == [jumbo]
+
+
+def test_synthesize_capture_deterministic():
+    a = pcap.synthesize_capture(300, seed=7)
+    b = pcap.synthesize_capture(300, seed=7)
+    assert a[0] == b[0]
+    np.testing.assert_array_equal(a[1], b[1])
+    np.testing.assert_array_equal(a[2], b[2])
+    c = pcap.synthesize_capture(300, seed=8)
+    assert c[0] != a[0]
+
+
+def test_empty_capture_round_trips():
+    raw = pcap.write_pcap([], [])
+    cap = pcap.read_pcap(raw)
+    assert cap.num_packets == 0
+    assert pcap.featurize(cap).shape == (0, pcap.PCAP_FEATURE_BITS)
+    assert pcap.featurize(cap, 64).shape == (0, 64)  # fold of zero rows
+    with pytest.raises(PcapFormatError):
+        pcap.pcap_scenario(cap, name="pcap:empty")
+
+
+def test_writer_input_validation():
+    with pytest.raises(ValueError):
+        pcap.write_pcap([b"x"], [1.0, 2.0])  # count mismatch
+    with pytest.raises(ValueError):
+        pcap.write_pcap([b"x"], [-1.0])  # negative time
+    with pytest.raises(ValueError):
+        pcap.write_pcap([b"x"], [1.0], endian="=")
+    with pytest.raises(ValueError):
+        pcap.write_pcapng([b"x"], [1.0], endian="=")
+
+
+def test_classic_malformed_inputs_raise():
+    pkts, ts, _ = _capture(8)
+    raw = pcap.write_pcap(pkts, ts)
+    with pytest.raises(PcapFormatError):  # unknown magic
+        pcap.read_pcap(b"\xde\xad\xbe\xef" + raw[4:])
+    with pytest.raises(PcapFormatError):  # truncated global header
+        pcap.read_pcap(raw[:20])
+    with pytest.raises(PcapFormatError):  # truncated record header
+        pcap.read_pcap(raw[: 24 + 10])
+    with pytest.raises(PcapFormatError):  # truncated record data
+        pcap.read_pcap(raw[:-3])
+    with pytest.raises(PcapFormatError):  # nothing at all
+        pcap.read_pcap(b"\xa1")
+
+
+def test_pcapng_malformed_inputs_raise():
+    pkts, ts, _ = _capture(8)
+    raw = pcap.write_pcapng(pkts, ts)
+    with pytest.raises(PcapFormatError):  # truncated final block
+        pcap.read_pcap(raw[:-5])
+    # corrupt the SHB trailing length (bytes 24..28 of the 28-byte SHB)
+    bad = bytearray(raw)
+    struct.pack_into("<I", bad, 24, 999)
+    with pytest.raises(PcapFormatError):
+        pcap.read_pcap(bytes(bad))
+    # bad byte-order magic
+    bad = bytearray(raw)
+    struct.pack_into("<I", bad, 8, 0x11111111)
+    with pytest.raises(PcapFormatError):
+        pcap.read_pcap(bytes(bad))
+    # packet block before any interface description: SHB + EPB, no IDB
+    shb = raw[:28]
+    epb_start = 28 + 20  # after SHB + IDB
+    epb_len = struct.unpack_from("<I", raw, epb_start + 4)[0]
+    with pytest.raises(PcapFormatError):
+        pcap.read_pcap(shb + raw[epb_start : epb_start + epb_len])
+
+
+def test_pcapng_multi_section_resets_interfaces():
+    # Interface ids are section-scoped: an EPB in section 2 must resolve
+    # against section 2's IDBs (here nanosecond tsresol), not section 1's.
+    def idb(tsresol=None):
+        opts = b""
+        if tsresol is not None:
+            opts = struct.pack("<HHB3x", 9, 1, tsresol) + struct.pack(
+                "<HH", 0, 0
+            )
+        blen = 20 + len(opts)
+        return (
+            struct.pack("<IIHHI", 1, blen, 1, 0, 65535)
+            + opts
+            + struct.pack("<I", blen)
+        )
+
+    shb = struct.pack("<IIIHHqI", 0x0A0D0D0A, 28, 0x1A2B3C4D, 1, 0, -1, 28)
+    pkt = _tcp_packet()
+    pad = (-len(pkt)) % 4
+    ts64 = 1_000_000_000  # 1.0 s at ns resolution, 1000 s at us
+    epb = (
+        struct.pack(
+            "<IIIIIII", 6, 32 + len(pkt) + pad, 0, ts64 >> 32,
+            ts64 & 0xFFFFFFFF, len(pkt), len(pkt),
+        )
+        + pkt
+        + b"\x00" * pad
+        + struct.pack("<I", 32 + len(pkt) + pad)
+    )
+    cap = pcap.read_pcap(shb + idb() + shb + idb(tsresol=9) + epb)
+    assert cap.num_packets == 1
+    np.testing.assert_allclose(cap.timestamps, [1.0])
+
+
+def test_pcapng_snaplen_zero_means_unlimited():
+    # IDB snaplen 0 = no limit: an SPB longer than 65535 must round-trip
+    # whole, not silently truncate.
+    big = _tcp_packet() + b"\x00" * 70000
+    shb = struct.pack("<IIIHHqI", 0x0A0D0D0A, 28, 0x1A2B3C4D, 1, 0, -1, 28)
+    idb = struct.pack("<IIHHII", 1, 20, 1, 0, 0, 20)
+    pad = (-len(big)) % 4
+    blen = 16 + len(big) + pad
+    spb = (
+        struct.pack("<III", 3, blen, len(big))
+        + big
+        + b"\x00" * pad
+        + struct.pack("<I", blen)
+    )
+    cap = pcap.read_pcap(shb + idb + spb)
+    assert cap.packets() == [big]
+
+
+def test_classic_epoch_scale_timestamp_precision():
+    # Splitting seconds before scaling keeps epoch-scale times precise to
+    # float64's own resolution (~0.24 us at 1.7e9 s) in both resolutions.
+    base = 1_700_000_000.0
+    ts = [base, base + 12.345678, base + 1e9]
+    pkts = [_tcp_packet()] * 3
+    for nanosecond in (False, True):
+        got = pcap.read_pcap(
+            pcap.write_pcap(pkts, ts, nanosecond=nanosecond)
+        ).timestamps
+        np.testing.assert_allclose(got, ts, rtol=0, atol=5e-7)
+
+
+def test_pcapng_truncated_tsresol_option_raises():
+    # IDB whose option header claims a value byte past the block's end must
+    # raise PcapFormatError, not IndexError.
+    shb = struct.pack("<IIIHHqI", 0x0A0D0D0A, 28, 0x1A2B3C4D, 1, 0, -1, 28)
+    opts = struct.pack("<HH", 9, 1)  # if_tsresol header, no value byte
+    blen = 20 + len(opts)
+    idb = (
+        struct.pack("<IIHHI", 1, blen, 1, 0, 65535)
+        + opts
+        + struct.pack("<I", blen)
+    )
+    with pytest.raises(PcapFormatError):
+        pcap.read_pcap(shb + idb)
+
+
+def test_pcapng_mixed_linktypes_raise():
+    # Two interfaces with different link types, packets on both: refuse
+    # (a Capture carries one linktype; raw-IP sliced at Ethernet offsets
+    # would be garbage features).
+    shb = struct.pack("<IIIHHqI", 0x0A0D0D0A, 28, 0x1A2B3C4D, 1, 0, -1, 28)
+    idb_eth = struct.pack("<IIHHII", 1, 20, 1, 0, 65535, 20)
+    idb_raw = struct.pack("<IIHHII", 1, 20, 101, 0, 65535, 20)  # RAW IP
+
+    def epb(iface):
+        pkt = _tcp_packet()
+        pad = (-len(pkt)) % 4
+        blen = 32 + len(pkt) + pad
+        return (
+            struct.pack("<IIIIIII", 6, blen, iface, 0, 0, len(pkt), len(pkt))
+            + pkt + b"\x00" * pad + struct.pack("<I", blen)
+        )
+
+    with pytest.raises(PcapFormatError):
+        pcap.read_pcap(shb + idb_eth + idb_raw + epb(0) + epb(1))
+    # single linktype (even non-Ethernet) still reads; featurizer gates it
+    cap = pcap.read_pcap(shb + idb_eth + idb_raw + epb(1) + epb(1))
+    assert cap.linktype == 101
+    with pytest.raises(PcapFormatError):
+        pcap.parse_headers(cap)
+
+
+def test_pcapng_skips_unknown_blocks():
+    pkts, ts, _ = _capture(8)
+    raw = pcap.write_pcapng(pkts, ts)
+    # splice a well-formed unknown block (type 0x0BAD) after SHB + IDB
+    unknown = struct.pack("<III", 0x0BAD, 16, 0) + struct.pack("<I", 16)
+    spliced = raw[:48] + unknown + raw[48:]
+    assert pcap.read_pcap(spliced).packets() == pkts
+
+
+# -- featurizer --------------------------------------------------------------
+
+def _tcp_packet():
+    eth = b"\xaa" * 6 + b"\xbb" * 6 + struct.pack(">H", 0x0800)
+    ip = struct.pack(
+        ">BBHHHBBHII", 0x45, 0, 40, 0x1234, 0x4000, 64, 6, 0,
+        0xC0A80001, 0x0A010203,
+    )
+    tcp = struct.pack(
+        ">HHIIBBHHH", 443, 51000, 1, 0, 0x50, 0x12, 4096, 0, 0
+    )
+    return eth + ip + tcp
+
+
+def test_featurizer_bit_encodings_exact():
+    cap = pcap.read_pcap(pcap.write_pcap([_tcp_packet()], [0.0]))
+    f = pcap.parse_headers(cap)
+    assert f.is_ipv4.all() and f.is_tcp.all() and not f.is_udp.any()
+    assert f.src_ip[0] == 0xC0A80001 and f.dst_ip[0] == 0x0A010203
+    assert f.src_port[0] == 443 and f.dst_port[0] == 51000
+    assert f.proto[0] == 6 and f.ip_len[0] == 40 and f.tcp_flags[0] == 0x12
+    assert f.iat_bucket[0] == 0  # first packet: IAT 0
+
+    bits = pcap.featurize(cap)[0]
+    assert bits.shape == (pcap.PCAP_FEATURE_BITS,)
+    off = 0
+    expected = {
+        "src_ip": 0xC0A80001, "dst_ip": 0x0A010203, "src_port": 443,
+        "dst_port": 51000, "proto": 6, "ip_len": 40, "tcp_flags": 0x12,
+    }
+    for name, width in pcap.FEATURE_LAYOUT:
+        field = bits[off : off + width]
+        if name == "iat_bucket":
+            want = np.zeros(width, np.int32)
+            want[0] = 1  # one-hot bucket 0
+        else:  # little-endian integer bits
+            want = (expected[name] >> np.arange(width)) & 1
+        np.testing.assert_array_equal(field, want, err_msg=name)
+        off += width
+    assert off == pcap.PCAP_FEATURE_BITS
+
+
+def test_featurizer_vlan_and_non_ip():
+    plain = _tcp_packet()
+    vlan = plain[:12] + struct.pack(">HH", 0x8100, 5) + plain[12:]
+    arp = b"\xaa" * 6 + b"\xbb" * 6 + struct.pack(">H", 0x0806) + b"\x00" * 28
+    runt = plain[:20]  # IPv4 header cut short
+    cap = pcap.read_pcap(
+        pcap.write_pcap([plain, vlan, arp, runt], [0.0, 1.0, 2.0, 3.0])
+    )
+    f = pcap.parse_headers(cap)
+    np.testing.assert_array_equal(f.is_ipv4, [True, True, False, False])
+    assert f.src_ip[1] == f.src_ip[0] and f.dst_port[1] == f.dst_port[0]
+    assert f.src_ip[2] == 0 and f.src_port[3] == 0 and f.tcp_flags[2] == 0
+    bits = pcap.featurize(cap)
+    assert set(np.unique(bits)) <= {0, 1}
+
+
+def test_iat_buckets_log_spaced():
+    # IATs in us: [0 (first)], 1, 10, 1000, 100000 -> log4 buckets
+    ts = np.cumsum([0.0, 1e-6, 10e-6, 1000e-6, 100000e-6])
+    pkts = [_tcp_packet()] * 5
+    f = pcap.parse_headers(pcap.read_pcap(pcap.write_pcap(pkts, ts)))
+    np.testing.assert_array_equal(f.iat_bucket, [0, 0, 1, 4, 7])
+
+
+def test_featurize_fold_matches_full_layout():
+    pkts, ts, _ = _capture(500)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    full = pcap.featurize(cap)
+    for width in (24, 64, 136, 200):
+        np.testing.assert_array_equal(
+            pcap.featurize(cap, width), traffic._fold_bits(full, width)
+        )
+    with pytest.raises(ValueError):
+        pcap.featurize(cap, 0)
+
+
+# -- scenario contract -------------------------------------------------------
+
+def test_registered_pcap_scenario_is_chunking_invariant():
+    pkts, ts, _ = _capture(1500, seed=3)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    pcap.register_pcap_scenario("pcap:chunktest", cap, overwrite=True)
+    n = 3000  # > capture size: exercises cyclic replay too
+    want = traffic.generate("pcap:chunktest", n, 24, seed=5)
+    for chunk_size in (1, 173, traffic.CANONICAL_CHUNK, n):
+        got = np.concatenate(
+            list(
+                traffic.stream(
+                    "pcap:chunktest", n, 24, chunk_size=chunk_size, seed=5
+                )
+            )
+        )
+        np.testing.assert_array_equal(got, want)
+    # pause/resume mid-trace replays the uninterrupted sequence
+    first = traffic.generate("pcap:chunktest", 1700, 24, seed=5)
+    rest = traffic.generate("pcap:chunktest", n, 24, seed=5)[1700:]
+    np.testing.assert_array_equal(np.concatenate([first, rest]), want)
+    # cyclic: position k and k + capture_size emit the same packet
+    np.testing.assert_array_equal(want[:1500], want[1500:])
+    # seed-independent: the capture is the world
+    np.testing.assert_array_equal(
+        traffic.generate("pcap:chunktest", 500, 24, seed=99), want[:500]
+    )
+
+
+def test_register_scenario_collision_and_overwrite():
+    pkts, ts, _ = _capture(100)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    s = pcap.register_pcap_scenario("pcap:collide", cap, overwrite=True)
+    assert traffic.register_scenario(s) is s  # same object: no-op
+    with pytest.raises(ValueError):
+        pcap.register_pcap_scenario("pcap:collide", cap)
+    s2 = pcap.register_pcap_scenario("pcap:collide", cap, overwrite=True)
+    assert traffic.get_scenario("pcap:collide") is s2
+
+
+def test_scenario_and_labels_accept_precomputed_work():
+    pkts, ts, _ = _capture(300)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    fields = pcap.parse_headers(cap)
+    feats = pcap.featurize(cap)
+    np.testing.assert_array_equal(
+        pcap.label_packets(cap, lambda f: (f.proto == 6).astype(int)),
+        pcap.label_packets(cap, lambda f: (f.proto == 6).astype(int),
+                           fields=fields),
+    )
+    a = pcap.pcap_scenario(cap, name="pcap:pre").generate(400, 32)
+    b = pcap.pcap_scenario(cap, name="pcap:pre", features=feats).generate(
+        400, 32
+    )
+    np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError):
+        pcap.pcap_scenario(cap, name="pcap:pre", features=feats[:10])
+
+
+def test_mixed_tenant_stream_with_pcap_tenant():
+    pkts, ts, _ = _capture(800, seed=4)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    pcap.register_pcap_scenario("pcap:tenant", cap, overwrite=True)
+    specs = [
+        traffic.TenantTrafficSpec("pcap:tenant", 48, 2.0),
+        traffic.TenantTrafficSpec("uniform_random", 16, 1.0),
+    ]
+    n = 2500
+    tids, bits = traffic.mixed_tenant_generate(specs, n, seed=11)
+    # tenant 0's subsequence IS the capture replay at its width
+    rows = tids == 0
+    np.testing.assert_array_equal(
+        bits[rows, :48],
+        traffic.generate("pcap:tenant", int(rows.sum()), 48),
+    )
+    # and the mixed stream stays chunking-invariant with a pcap tenant
+    chunks = list(traffic.mixed_tenant_stream(specs, n, chunk_size=137, seed=11))
+    np.testing.assert_array_equal(
+        np.concatenate([b for _, b in chunks]), bits
+    )
+
+
+# -- trainer hook ------------------------------------------------------------
+
+def test_make_capture_task_temporal_split():
+    from repro.train.bnn_trainer import make_capture_task
+
+    pkts, ts, labels = _capture(1000, seed=6)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    bits = pcap.featurize(cap, 32)
+    tr_x, tr_y, ev_x, ev_y = make_capture_task(
+        bits, labels, train_frac=0.8, seed=1
+    )
+    assert tr_x.shape == (800, 32) and ev_x.shape == (200, 32)
+    # held-out tail is the capture's arrival-order suffix
+    np.testing.assert_array_equal(ev_x, bits[800:])
+    np.testing.assert_array_equal(ev_y, labels[800:])
+    # train is a permutation of the prefix (labels travel with packets)
+    order = np.lexsort(tr_x.T)
+    want = bits[:800]
+    np.testing.assert_array_equal(tr_x[order], want[np.lexsort(want.T)])
+    with pytest.raises(ValueError):
+        make_capture_task(bits, labels[:10])
+    with pytest.raises(ValueError):
+        make_capture_task(bits, labels, train_frac=1.5)
+    with pytest.raises(ValueError):
+        make_capture_task(bits[:1], labels[:1], train_frac=0.5)
+
+
+def test_trainer_accepts_capture_task():
+    from repro.train.bnn_trainer import (
+        BnnTrainConfig,
+        BnnTrainer,
+        make_capture_task,
+    )
+
+    pkts, ts, labels = _capture(600, seed=2)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    bits = pcap.featurize(cap, 16)
+    task = make_capture_task(bits, labels, train_frac=0.75, seed=0)
+    cfg = BnnTrainConfig(
+        layer_sizes=(16, 8, 1), steps=3, batch=32, log_every=1,
+        checkpoint_every=0,
+    )
+    trainer = BnnTrainer(cfg, task=task)
+    summary = trainer.train()
+    assert summary["final_step"] == 3
+    held = trainer.evaluate_held_out()
+    assert held["packets"] == 150
+    # non-ndarray task elements are converted at construction, not later
+    as_lists = tuple(np.asarray(a).tolist() for a in task)
+    t2 = BnnTrainer(cfg, task=as_lists)
+    assert t2.evaluate_held_out()["packets"] == 150
+    with pytest.raises(ValueError):  # width mismatch vs layer_sizes
+        BnnTrainer(cfg, task=make_capture_task(pcap.featurize(cap, 24), labels))
+    with pytest.raises(ValueError):  # eval width mismatch is caught too
+        BnnTrainer(cfg, task=(task[0], task[1], task[2][:, :8], task[3]))
+    with pytest.raises(ValueError):  # label length mismatch
+        BnnTrainer(cfg, task=(task[0], task[1][:-1], task[2], task[3]))

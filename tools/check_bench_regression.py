@@ -41,6 +41,7 @@ BUDGET_ENV = (
     "TRAIN_DEPLOY_BENCH_STEPS",
     "MULTITENANT_BENCH_TENANTS",
     "MULTITENANT_BENCH_PACKETS",
+    "PCAP_BENCH_PACKETS",
 )
 
 
