@@ -61,13 +61,16 @@ def rows() -> list[tuple[str, float, str]]:
                 f"dataplane_fused_{name}",
                 1e6 * sr.seconds / max(1, sr.chunks),
                 f"pps={sr.packets_per_second:.3e} packets={sr.packets} "
-                f"asic_gap={sr.packets_per_second / asic.packets_per_second:.2e}",
+                f"asic_gap={sr.packets_per_second / asic.packets_per_second:.2e} "
+                f"warmup_us={1e6 * sr.warmup_seconds:.0f}",
             )
         )
 
     # Legacy per-op interpreter: one chunk, same size, eager dispatch.
     x = jnp.asarray(traffic.generate("uniform_random", chunk, 32, seed=0))
+    t0 = time.perf_counter()
     run_program(prog, x).block_until_ready()  # warm any lazy init
+    legacy_warm_us = 1e6 * (time.perf_counter() - t0)
     t0 = time.perf_counter()
     run_program(prog, x).block_until_ready()
     legacy_s = time.perf_counter() - t0
@@ -76,7 +79,8 @@ def rows() -> list[tuple[str, float, str]]:
         (
             "dataplane_legacy_interpreter",
             1e6 * legacy_s,
-            f"pps={legacy_pps:.3e} packets={chunk} (per-op eager dispatch)",
+            f"pps={legacy_pps:.3e} packets={chunk} "
+            f"warmup_us={legacy_warm_us:.0f} (per-op eager dispatch)",
         )
     )
 

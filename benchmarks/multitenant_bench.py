@@ -97,7 +97,8 @@ def rows() -> list[tuple[str, float, str]]:
                     f"pps={res.packets_per_second:.3e} packets={res.packets} "
                     f"tenants={count} dispatches={dispatches} "
                     f"tenant_pps_min={min(per_pps):.3e} "
-                    f"tenant_pps_max={max(per_pps):.3e}",
+                    f"tenant_pps_max={max(per_pps):.3e} "
+                    f"warmup_us={1e6 * res.warmup_seconds:.0f}",
                 )
             )
     footprint = sum(p.num_elements for p in progs)

@@ -23,6 +23,18 @@ derived column parsed into a ``metrics`` map — the artifact
 ``tools/check_bench_regression.py`` gates CI on — and a per-module timing
 summary is printed at the end (``# timing ...`` lines) so slow modules are
 visible in the job log.
+
+Timing is split **warmup vs steady-state**: modules report their jit
+warm-call time as ``warmup_us=`` metrics in the derived column, and the
+JSON payload carries ``warmup_seconds`` (their sum) next to
+``steady_seconds`` (module wall time minus warmup) — so the regression
+gate's throughput numbers never conflate compile time with execution, and
+a compile-time blow-up is visible as its own number.
+
+Set ``$REPRO_OBS`` truthy to run the whole harness under the runtime
+observability layer (``repro.obs``): metrics JSONL, Prometheus text, and a
+chrome trace land in ``$REPRO_OBS_DIR`` (default ``BENCH_OUT_DIR``) —
+render them with ``tools/obs_report.py``.
 """
 from __future__ import annotations
 
@@ -48,9 +60,18 @@ def parse_metrics(derived: str) -> dict[str, float]:
 
 def write_bench_json(out_dir: str, module: str, seconds: float, rows) -> str:
     path = os.path.join(out_dir, f"BENCH_{module}.json")
+    # Warmup vs steady-state split: every row's ``warmup_us=`` metric (the
+    # module's jit warm calls, reported by the benchmarks themselves) is
+    # summed out of the module wall time, so ``steady_seconds`` is the
+    # execution-only budget the throughput metrics were measured in.
+    warmup = sum(
+        parse_metrics(derived).get("warmup_us", 0.0) for _, _, derived in rows
+    ) / 1e6
     payload = {
         "module": module,
         "seconds": round(seconds, 3),
+        "warmup_seconds": round(warmup, 3),
+        "steady_seconds": round(max(seconds - warmup, 0.0), 3),
         "rows": [
             {
                 "name": name,
@@ -72,6 +93,7 @@ def main() -> None:
         dataplane_bench,
         kernel_bench,
         multitenant_bench,
+        obs_overhead_bench,
         pcap_bench,
         popcnt_ablation,
         roofline_summary,
@@ -79,8 +101,10 @@ def main() -> None:
         throughput_model,
         train_deploy_bench,
     )
+    from repro import obs
 
     out_dir = os.environ.get("BENCH_OUT_DIR", ".")
+    observing = obs.enable_from_env()
     print("name,us_per_call,derived")
     modules = [
         table1_elements,
@@ -92,6 +116,7 @@ def main() -> None:
         train_deploy_bench,
         multitenant_bench,
         pcap_bench,
+        obs_overhead_bench,
     ]
     failures = 0
     timings: list[tuple[str, float, bool]] = []
@@ -116,6 +141,11 @@ def main() -> None:
     for short, seconds, ok in sorted(timings, key=lambda t: -t[1]):
         status = "" if ok else "  [FAILED]"
         print(f"# timing {short:<22} {seconds:>7.1f}s{status}")
+    if observing:
+        obs_dir = os.environ.get(obs.OBS_DIR_ENV, out_dir)
+        paths = obs.export_all(obs_dir, prefix="bench_obs")
+        for key in sorted(paths):
+            print(f"# obs {key}: {paths[key]}")
     if failures:
         sys.exit(1)
 

@@ -34,9 +34,12 @@ def rows() -> list[tuple[str, float, str]]:
     trainer = BnnTrainer(cfg)
 
     # One step outside the clock warms the jit cache; train() then times the
-    # steady state.
+    # steady state.  The warm step's wall time is the jit compile cost, so
+    # it lands in the warmup/steady split as ``warmup_us=``.
     trainer.cfg.steps = 1
+    t0 = time.perf_counter()
     trainer.train()
+    warmup_us = 1e6 * (time.perf_counter() - t0)
     trainer.cfg.steps = steps
     summary = trainer.train()
     acc = summary["history"][-1]["accuracy"] if summary["history"] else float("nan")
@@ -45,7 +48,8 @@ def rows() -> list[tuple[str, float, str]]:
             "bnn_train_step",
             1e6 / summary["steps_per_second"],
             f"steps_per_s={summary['steps_per_second']:.1f} "
-            f"batch={cfg.batch} final_acc={acc:.3f}",
+            f"batch={cfg.batch} final_acc={acc:.3f} "
+            f"warmup_us={warmup_us:.0f}",
         )
     ]
 

@@ -17,7 +17,10 @@ Backends:
 
 Streaming (:func:`execute_stream`) re-chunks any packet iterator into
 fixed-size blocks so millions of packets run at constant device memory and a
-single compiled executable.
+single compiled executable.  The stream path is instrumented through
+``repro.obs`` (packets/chunk counters, chunk-latency histogram, and
+``compile:``/``execute:`` spans) — all no-ops unless the global
+observability switch is on (see ``docs/OBSERVABILITY.md``).
 
 Routed parse/deparse (:func:`parse_packets_routed`,
 :func:`deparse_regs_routed`) generalize the parser to per-packet program
@@ -48,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.dataplane import lowering
 from repro.dataplane.lowering import LoweredProgram
 
@@ -84,6 +88,15 @@ _TABLE_CACHE: dict[str, _DeviceTables] = {}
 def _device_tables(lp: LoweredProgram) -> _DeviceTables:
     key = lp.fingerprint()
     t = _TABLE_CACHE.get(key)
+    if obs.enabled():
+        # A table-cache miss is the executor-side proxy for "this program
+        # will trace + jit-compile on its next dispatch" — the counter pair
+        # the obs report turns into a cache hit rate.
+        obs.registry().counter(
+            "dataplane.table_cache_hits_total"
+            if t is not None
+            else "dataplane.table_cache_misses_total"
+        ).inc()
     if t is None:
         t = _DeviceTables(
             ops=(
@@ -311,6 +324,7 @@ class StreamResult:
     seconds: float
     bit_counts: np.ndarray            # (output_bits,) int64: ones per Y bit
     outputs: np.ndarray | None = None  # (packets, output_bits) uint8 if collected
+    warmup_seconds: float = 0.0        # first-chunk warm call (incl. jit compile)
 
     @property
     def packets_per_second(self) -> float:
@@ -350,7 +364,8 @@ def execute_stream(
     With ``collect=False`` (default) only aggregate statistics are kept —
     memory stays constant no matter how many packets flow.  Timing covers
     device execution including host transfer (``block_until_ready`` via
-    ``np.asarray``), not trace/compile of the first chunk.
+    ``np.asarray``), not trace/compile of the first chunk — that warm call
+    is reported separately as ``warmup_seconds``.
     """
     backend = resolve_backend(backend)
     bit_counts = np.zeros(lowered.output_bits, np.int64)
@@ -358,27 +373,50 @@ def execute_stream(
     total = 0
     n_chunks = 0
     seconds = 0.0
-    for block in _rechunk(chunks, chunk_size):
-        n = block.shape[0]
-        pad = chunk_size - n
-        if pad:
-            block = np.pad(block, ((0, pad), (0, 0)))
-        dev = jnp.asarray(block)
-        if n_chunks == 0:  # warm the compile cache outside the clock
-            _run_chunk(lowered, dev, backend, interpret).block_until_ready()
-        t0 = time.perf_counter()
-        res = np.asarray(_run_chunk(lowered, dev, backend, interpret))
-        seconds += time.perf_counter() - t0
-        res = res[:n]
-        bit_counts += res.sum(axis=0, dtype=np.int64)
-        if collect:
-            collected.append(res.astype(np.uint8))
-        total += n
-        n_chunks += 1
+    warmup = 0.0
+    with obs.span(
+        "stream:execute_stream", cat="stream",
+        backend=backend, chunk_size=chunk_size,
+    ):
+        for block in _rechunk(chunks, chunk_size):
+            n = block.shape[0]
+            pad = chunk_size - n
+            if pad:
+                block = np.pad(block, ((0, pad), (0, 0)))
+            dev = jnp.asarray(block)
+            if n_chunks == 0:  # warm the compile cache outside the clock
+                with obs.span(
+                    "compile:stream_chunk", cat="compile",
+                    backend=backend, packets=chunk_size,
+                ):
+                    w0 = time.perf_counter()
+                    _run_chunk(
+                        lowered, dev, backend, interpret
+                    ).block_until_ready()
+                    warmup = time.perf_counter() - w0
+            with obs.span("execute:stream_chunk", cat="execute", packets=n):
+                t0 = time.perf_counter()
+                res = np.asarray(_run_chunk(lowered, dev, backend, interpret))
+                dt = time.perf_counter() - t0
+            seconds += dt
+            res = res[:n]
+            bit_counts += res.sum(axis=0, dtype=np.int64)
+            if collect:
+                collected.append(res.astype(np.uint8))
+            total += n
+            n_chunks += 1
+            if obs.enabled():
+                m = obs.registry()
+                m.counter("dataplane.packets_total").inc(n)
+                m.counter("dataplane.chunks_total").inc()
+                m.histogram("dataplane.chunk_seconds").observe(dt)
+    if obs.enabled() and seconds > 0:
+        obs.registry().gauge("dataplane.stream_pps").set(total / seconds)
     return StreamResult(
         packets=total,
         chunks=n_chunks,
         seconds=seconds,
         bit_counts=bit_counts,
         outputs=np.concatenate(collected, axis=0) if collected else None,
+        warmup_seconds=warmup,
     )

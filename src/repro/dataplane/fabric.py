@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.pipeline import ChipSpec, PipelineProgram
 from repro.core.throughput import report_for_program
 from repro.dataplane import executor as _executor
@@ -62,6 +63,7 @@ class FabricRunResult:
     packets: int
     seconds: float
     hop_seconds: list[float]
+    warmup_seconds: float = 0.0  # whole-chain warm call (incl. jit compile)
 
     @property
     def packets_per_second(self) -> float:
@@ -151,40 +153,77 @@ class SwitchFabric:
         lp = self.lowered
         in_slot, in_shift, out_slot, out_shift = _executor._device_tables(lp).io
 
-        def push(block: jax.Array) -> jax.Array:
+        def push(block: jax.Array, warm: bool = False) -> jax.Array:
             regs = _executor.parse_packets(
                 block, in_slot, in_shift, num_regs=lp.num_regs
             )
             for hop in self.hops:
-                h0 = time.perf_counter()
-                # The register file leaving this hop is the PHV on the wire.
-                regs = _executor.run_hop(
-                    hop.lowered, regs, backend=backend, interpret=interpret
-                )
-                regs.block_until_ready()
-                hop_seconds[hop.index] += time.perf_counter() - h0
+                with obs.span(
+                    "compile:hop" if warm else "execute:hop",
+                    cat="compile" if warm else "execute",
+                    hop=hop.index, mode=self.mode,
+                ):
+                    h0 = time.perf_counter()
+                    # The register file leaving this hop is the PHV on the
+                    # wire.
+                    regs = _executor.run_hop(
+                        hop.lowered, regs, backend=backend, interpret=interpret
+                    )
+                    regs.block_until_ready()
+                    h_dt = time.perf_counter() - h0
+                hop_seconds[hop.index] += h_dt
+                if obs.enabled() and not warm:
+                    obs.registry().histogram(
+                        "fabric.hop_seconds", hop=str(hop.index)
+                    ).observe(h_dt)
             return _executor.deparse_regs(regs, out_slot, out_shift)
 
-        # Warm every hop's compiled executable outside the clock (each hop
-        # slice has its own table shapes), so measured pkt/s reflects the
-        # steady state — matching execute_stream's timing discipline.
-        push(jnp.zeros((min(chunk, n), lp.input_bits), jnp.int32)).block_until_ready()
-        hop_seconds = [0.0] * self.num_hops
+        with obs.span(
+            "stream:fabric_run", cat="stream",
+            mode=self.mode, hops=self.num_hops, packets=n, backend=backend,
+        ):
+            # Warm every hop's compiled executable outside the clock (each
+            # hop slice has its own table shapes), so measured pkt/s reflects
+            # the steady state — matching execute_stream's timing discipline.
+            with obs.span(
+                "compile:fabric_chain", cat="compile",
+                hops=self.num_hops, backend=backend,
+            ):
+                w0 = time.perf_counter()
+                push(
+                    jnp.zeros((min(chunk, n), lp.input_bits), jnp.int32),
+                    warm=True,
+                ).block_until_ready()
+                warmup = time.perf_counter() - w0
+            hop_seconds = [0.0] * self.num_hops
 
-        for start in range(0, n, chunk):
-            block = packets[start : start + chunk]
-            valid = block.shape[0]
-            pad = chunk - valid if n > chunk else 0
-            if pad:
-                block = np.pad(block, ((0, pad), (0, 0)))
-            dev = jnp.asarray(block)  # H2D outside the clock, as execute_stream
-            t0 = time.perf_counter()
-            res = np.asarray(push(dev))
-            total += time.perf_counter() - t0
-            out[start : start + valid] = res[:valid]
+            for start in range(0, n, chunk):
+                block = packets[start : start + chunk]
+                valid = block.shape[0]
+                pad = chunk - valid if n > chunk else 0
+                if pad:
+                    block = np.pad(block, ((0, pad), (0, 0)))
+                # H2D outside the clock, as execute_stream
+                dev = jnp.asarray(block)
+                with obs.span(
+                    "execute:fabric_chunk", cat="execute", packets=valid
+                ):
+                    t0 = time.perf_counter()
+                    res = np.asarray(push(dev))
+                    dt = time.perf_counter() - t0
+                total += dt
+                out[start : start + valid] = res[:valid]
+                if obs.enabled():
+                    m = obs.registry()
+                    m.counter("fabric.packets_total").inc(valid)
+                    m.histogram("fabric.chunk_seconds").observe(dt)
 
         result = FabricRunResult(
-            outputs=out, packets=n, seconds=total, hop_seconds=hop_seconds
+            outputs=out,
+            packets=n,
+            seconds=total,
+            hop_seconds=hop_seconds,
+            warmup_seconds=warmup,
         )
         self._last_run = result
         return result

@@ -38,6 +38,11 @@ Invariants:
   falls back to time-slicing instead of rejecting.
 * **Conservation** — per tenant, ``arrived == served + dropped``; nothing is
   silently lost between the mixed stream and the per-tenant outputs.
+* **Observation only** — both run paths are instrumented through
+  ``repro.obs`` (per-tenant packet/drop/defer counters, queue-delay
+  histograms with p50/p99, and ``compile:``/``execute:`` spans), all
+  no-ops while the global switch is off; enabling observability never
+  changes any tenant's outputs (see ``docs/OBSERVABILITY.md``).
 """
 from __future__ import annotations
 
@@ -48,6 +53,7 @@ from typing import Iterable, Iterator, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.pipeline import RMT, ChipSpec, PipelineProgram
 from repro.dataplane import executor as _executor
 from repro.dataplane import telemetry as _telemetry
@@ -230,6 +236,7 @@ class SchedulerRunResult:
     seconds: float
     chunks: int
     tenants: list[TenantRunStats]
+    warmup_seconds: float = 0.0  # jit warm calls across programs (compile)
 
     @property
     def packets_per_second(self) -> float:
@@ -492,30 +499,56 @@ class SwitchScheduler:
             )
 
         seconds = 0.0
+        warmup = 0.0
         n_chunks = 0
-        for tids, bits in _rechunk_mixed(stream, chunk):
-            self._check_chunk(tids, bits, width)
-            n = bits.shape[0]
-            pad = chunk - n
-            if pad:  # stable shapes: one compiled executable for the run
-                bits = np.pad(bits, ((0, pad), (0, 0)))
-                tids = np.pad(tids, (0, pad))
-            bits_dev, tids_dev = jnp.asarray(bits), jnp.asarray(tids)
-            if n_chunks == 0:  # warm the compile cache outside the clock
-                push(tids_dev, bits_dev).block_until_ready()
-            t0 = time.perf_counter()
-            res = np.asarray(push(tids_dev, bits_dev))
-            seconds += time.perf_counter() - t0
-            res, tids = res[:n], tids[:n]
-            for t, st in enumerate(stats):
-                rows = np.nonzero(tids == t)[0]
-                if not rows.size:
-                    continue
-                st.packets += int(rows.size)
-                st.served += int(rows.size)
-                if collect:
-                    collected[t].append(res[rows, : mp.out_bits[t]])
-            n_chunks += 1
+        with obs.span(
+            "stream:mt_merged", cat="stream",
+            tenants=len(self.tenants), backend=backend,
+        ):
+            for tids, bits in _rechunk_mixed(stream, chunk):
+                self._check_chunk(tids, bits, width)
+                n = bits.shape[0]
+                pad = chunk - n
+                if pad:  # stable shapes: one compiled executable for the run
+                    bits = np.pad(bits, ((0, pad), (0, 0)))
+                    tids = np.pad(tids, (0, pad))
+                bits_dev, tids_dev = jnp.asarray(bits), jnp.asarray(tids)
+                if n_chunks == 0:  # warm the compile cache outside the clock
+                    with obs.span(
+                        "compile:mt_merged", cat="compile", backend=backend
+                    ):
+                        w0 = time.perf_counter()
+                        push(tids_dev, bits_dev).block_until_ready()
+                        warmup = time.perf_counter() - w0
+                with obs.span("execute:mt_chunk", cat="execute", packets=n):
+                    t0 = time.perf_counter()
+                    res = np.asarray(push(tids_dev, bits_dev))
+                    dt = time.perf_counter() - t0
+                seconds += dt
+                res, tids = res[:n], tids[:n]
+                for t, st in enumerate(stats):
+                    rows = np.nonzero(tids == t)[0]
+                    if not rows.size:
+                        continue
+                    st.packets += int(rows.size)
+                    st.served += int(rows.size)
+                    if collect:
+                        collected[t].append(res[rows, : mp.out_bits[t]])
+                    if obs.enabled():
+                        m = obs.registry()
+                        name = self.tenants[t].name
+                        m.counter("mt.packets_total", tenant=name).inc(
+                            int(rows.size)
+                        )
+                        m.counter("mt.served_total", tenant=name).inc(
+                            int(rows.size)
+                        )
+                        # One fused dispatch serves the whole chunk: every
+                        # packet in it waits exactly the dispatch latency.
+                        m.histogram(
+                            "mt.queue_delay_seconds", tenant=name
+                        ).observe(dt, count=int(rows.size))
+                n_chunks += 1
 
         for t, st in enumerate(stats):
             # One fused pass serves everyone: wall time is shared, so every
@@ -533,6 +566,7 @@ class SwitchScheduler:
             seconds=seconds,
             chunks=n_chunks,
             tenants=stats,
+            warmup_seconds=warmup,
         )
 
     def _run_time_sliced(
@@ -545,74 +579,133 @@ class SwitchScheduler:
         collected: list[list[np.ndarray]] = [[] for _ in self.tenants]
         warmed = [False] * len(self.tenants)
         seconds_total = 0.0
+        warmup_total = 0.0
         n_chunks = 0
+        observing = obs.enabled()
+        # Per-packet enqueue timestamps (same chunking as ``queues``), kept
+        # only while observing: serve time minus arrival time is the real
+        # wall-clock queueing delay each packet experienced in the simulator
+        # — the per-tenant p99 the SLO control-plane work keys on.
+        arrivals: list[list[np.ndarray]] = [[] for _ in self.tenants]
 
         def serve_turn(t: int) -> None:
             """One weighted-RR turn: run up to ``quanta[t]`` queued packets
             through tenant t's own program."""
+            nonlocal warmup_total
             st = stats[t]
             take = min(queued[t], quanta[t])
             if take == 0:
                 return
-            st.deferred += queued[t] - take  # backlog waits >= 1 more turn
+            deferred_now = queued[t] - take  # backlog waits >= 1 more turn
+            st.deferred += deferred_now
             batch = np.concatenate(queues[t])[:queued[t]]
             head, tail = batch[:take], batch[take:]
             queues[t] = [tail] if tail.size else []
+            if observing:
+                times = np.concatenate(arrivals[t])[:queued[t]]
+                head_times, tail_times = times[:take], times[take:]
+                arrivals[t] = [tail_times] if tail_times.size else []
             queued[t] -= take
             pad = quanta[t] - take  # fixed turn shape: one compile per tenant
             block = np.pad(head, ((0, pad), (0, 0))) if pad else head
             dev = jnp.asarray(block)
-            lp = self.tenants[t].lowered
+            tenant = self.tenants[t]
+            lp = tenant.lowered
             if not warmed[t]:
-                np.asarray(
+                with obs.span(
+                    "compile:mt_tenant", cat="compile",
+                    tenant=tenant.name, backend=backend,
+                ):
+                    w0 = time.perf_counter()
+                    np.asarray(
+                        _executor._run_chunk(lp, dev, backend, interpret)
+                    )
+                    warmup_total += time.perf_counter() - w0
+                warmed[t] = True
+            with obs.span(
+                "execute:mt_turn", cat="execute",
+                tenant=tenant.name, packets=take,
+            ):
+                t0 = time.perf_counter()
+                res = np.asarray(
                     _executor._run_chunk(lp, dev, backend, interpret)
                 )
-                warmed[t] = True
-            t0 = time.perf_counter()
-            res = np.asarray(
-                _executor._run_chunk(lp, dev, backend, interpret)
-            )
-            st.seconds += time.perf_counter() - t0
+                t1 = time.perf_counter()
+            st.seconds += t1 - t0
             st.served += take
             st.slices += 1
             if collect:
                 collected[t].append(res[:take])
+            if observing:
+                m = obs.registry()
+                m.counter("mt.served_total", tenant=tenant.name).inc(take)
+                m.counter("mt.slices_total", tenant=tenant.name).inc()
+                if deferred_now:
+                    m.counter(
+                        "mt.deferred_total", tenant=tenant.name
+                    ).inc(deferred_now)
+                m.histogram(
+                    "mt.queue_delay_seconds", tenant=tenant.name
+                ).observe_array(np.maximum(t1 - head_times, 0.0))
 
-        for tids, bits in stream:
-            tids, bits = np.asarray(tids), np.asarray(bits)
-            self._check_chunk(tids, bits, bits.shape[1] if bits.ndim == 2 else -1)
-            if bits.shape[1] < width:
-                raise ValueError(
-                    f"mixed packets are {bits.shape[1]}b wide; widest tenant "
-                    f"needs {width}b"
+        with obs.span(
+            "stream:mt_time_sliced", cat="stream",
+            tenants=len(self.tenants), backend=backend,
+        ):
+            for tids, bits in stream:
+                tids, bits = np.asarray(tids), np.asarray(bits)
+                self._check_chunk(
+                    tids, bits, bits.shape[1] if bits.ndim == 2 else -1
                 )
-            n_chunks += 1
-            for t, tenant in enumerate(self.tenants):
-                rows = np.nonzero(tids == t)[0]
-                if not rows.size:
-                    continue
-                st = stats[t]
-                st.packets += int(rows.size)
-                arrived = bits[rows, : int(tenant.lowered.input_bits)]
-                if self.max_queue is not None:
-                    space = self.max_queue - queued[t]
-                    if arrived.shape[0] > space:  # tail drop at admission
-                        st.dropped += int(arrived.shape[0] - space)
-                        arrived = arrived[:space]
-                if arrived.shape[0]:
-                    queues[t].append(arrived)
-                    queued[t] += int(arrived.shape[0])
-            # The chip alternates tenants while anyone has a full quantum
-            # waiting; sub-quantum remainders wait for more arrivals (they
-            # are served — quantum-padded — only in the end-of-stream drain).
-            while any(q >= quanta[t] for t, q in enumerate(queued)):
-                for t in range(len(self.tenants)):
-                    if queued[t] >= quanta[t]:
-                        serve_turn(t)
+                if bits.shape[1] < width:
+                    raise ValueError(
+                        f"mixed packets are {bits.shape[1]}b wide; widest "
+                        f"tenant needs {width}b"
+                    )
+                n_chunks += 1
+                now = time.perf_counter() if observing else 0.0
+                for t, tenant in enumerate(self.tenants):
+                    rows = np.nonzero(tids == t)[0]
+                    if not rows.size:
+                        continue
+                    st = stats[t]
+                    st.packets += int(rows.size)
+                    arrived = bits[rows, : int(tenant.lowered.input_bits)]
+                    dropped_now = 0
+                    if self.max_queue is not None:
+                        space = self.max_queue - queued[t]
+                        if arrived.shape[0] > space:  # tail drop at admission
+                            dropped_now = int(arrived.shape[0] - space)
+                            st.dropped += dropped_now
+                            arrived = arrived[:space]
+                    if arrived.shape[0]:
+                        queues[t].append(arrived)
+                        queued[t] += int(arrived.shape[0])
+                        if observing:
+                            arrivals[t].append(
+                                np.full(arrived.shape[0], now, np.float64)
+                            )
+                    if observing:
+                        m = obs.registry()
+                        m.counter(
+                            "mt.packets_total", tenant=tenant.name
+                        ).inc(int(rows.size))
+                        if dropped_now:
+                            m.counter(
+                                "mt.dropped_total", tenant=tenant.name
+                            ).inc(dropped_now)
+                # The chip alternates tenants while anyone has a full
+                # quantum waiting; sub-quantum remainders wait for more
+                # arrivals (they are served — quantum-padded — only in the
+                # end-of-stream drain).
+                while any(q >= quanta[t] for t, q in enumerate(queued)):
+                    for t in range(len(self.tenants)):
+                        if queued[t] >= quanta[t]:
+                            serve_turn(t)
 
-        while any(queued):  # end of stream: drain every backlog
-            for t in range(len(self.tenants)):
-                serve_turn(t)
+            while any(queued):  # end of stream: drain every backlog
+                for t in range(len(self.tenants)):
+                    serve_turn(t)
 
         for t, st in enumerate(stats):
             seconds_total += st.seconds
@@ -630,6 +723,7 @@ class SwitchScheduler:
             seconds=seconds_total,
             chunks=n_chunks,
             tenants=stats,
+            warmup_seconds=warmup_total,
         )
 
     # -- accounting ----------------------------------------------------------

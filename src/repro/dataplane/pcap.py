@@ -61,10 +61,12 @@ from __future__ import annotations
 import dataclasses
 import os
 import struct
+import time
 from typing import Callable, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.dataplane import traffic
 
 __all__ = [
@@ -629,7 +631,28 @@ def featurize(cap: Capture, input_bits: int | None = None) -> np.ndarray:
     (``FEATURE_LAYOUT``) is returned; otherwise it is XOR-folded/tiled to
     exactly ``input_bits`` columns with the same ``traffic._fold_bits``
     transform every synthetic scenario uses.
+
+    Instrumented through ``repro.obs`` (featurized-packet counter, per-call
+    latency histogram, throughput gauge) — no-ops unless the global
+    observability switch is on.
     """
+    if obs.enabled():
+        with obs.span(
+            "execute:pcap_featurize", cat="execute", packets=cap.num_packets
+        ):
+            t0 = time.perf_counter()
+            out = _featurize(cap, input_bits)
+            dt = time.perf_counter() - t0
+        m = obs.registry()
+        m.counter("pcap.packets_featurized_total").inc(cap.num_packets)
+        m.histogram("pcap.featurize_seconds").observe(dt)
+        if dt > 0:
+            m.gauge("pcap.featurize_pps").set(cap.num_packets / dt)
+        return out
+    return _featurize(cap, input_bits)
+
+
+def _featurize(cap: Capture, input_bits: int | None = None) -> np.ndarray:
     f = parse_headers(cap)
     n = cap.num_packets
     if n == 0:

@@ -215,6 +215,32 @@ class MultiTenantTelemetry:
     def total_dropped(self) -> int:
         return sum(t.dropped for t in self.tenants)
 
+    @property
+    def total_deferred(self) -> int:
+        return sum(t.deferred for t in self.tenants)
+
+    def tenant(self, key: int | str) -> TenantTelemetry:
+        """Look up one tenant's telemetry by tid or by name.
+
+        The per-tenant query path: ``tel.tenant(0).dropped`` /
+        ``tel.tenant("iot").deferred`` answer "who lost packets and who
+        waited" without aggregating away the tenant axis — the counts that
+        feed the per-tenant ``mt.dropped_total`` / ``mt.deferred_total``
+        observability metrics.
+        """
+        for t in self.tenants:
+            if (t.tid == key) if isinstance(key, int) else (t.name == key):
+                return t
+        raise KeyError(f"no tenant {key!r} in this telemetry")
+
+    def dropped_for(self, key: int | str) -> int:
+        """Tail-dropped packet count for one tenant (tid or name)."""
+        return self.tenant(key).dropped
+
+    def deferred_for(self, key: int | str) -> int:
+        """Deferred packet-turn count for one tenant (tid or name)."""
+        return self.tenant(key).deferred
+
     def render(self) -> str:
         lines = [
             f"scheduler[{self.chip_name}] mode={self.mode} "

@@ -1,0 +1,153 @@
+"""``repro.obs`` — runtime observability for the dataplane hot path.
+
+One global switch, three capabilities:
+
+* a **metrics registry** (``obs.metrics``): counters, gauges, and
+  streaming histograms with p50/p95/p99 — packets/s, chunk latency,
+  per-tenant queue delay, drops/defers, jit/table cache hits;
+* a **span tracer** (``obs.tracing``): nested context-manager spans
+  (``stream > chunk > hop > execute``) with explicit ``compile`` vs
+  ``execute`` categories, exporting Chrome Trace Event JSON;
+* **exporters** (``obs.export``): metrics JSONL, Prometheus-style text,
+  chrome trace — rendered human-readable by ``tools/obs_report.py``.
+
+Usage — instrumented code (the executor, fabric, scheduler, featurizer,
+trainer) calls the module-level helpers, which are no-ops until
+:func:`enable` flips the switch::
+
+    from repro import obs
+
+    with obs.span("execute:chunk", cat="execute", packets=n):
+        ...hot work...
+    if obs.enabled():
+        obs.registry().counter("dataplane.packets_total").inc(n)
+
+Operators (tests, benchmarks, examples, CI) turn it on around a run and
+export::
+
+    obs.enable(reset=True)
+    ...traced run...
+    paths = obs.export_all("obs_out")   # jsonl + prom + chrome trace
+
+Invariants:
+
+* **Disabled means no-op** — with the switch off, :func:`span` returns a
+  shared null context manager and instrumented code skips all metric
+  work; the instrumented paths are bit-exact with uninstrumented code in
+  *both* states (observability never touches data), and the disabled-path
+  overhead is bounded by test and benchmark (< 5%).
+* **One global state** — helpers address a single process-wide registry +
+  tracer pair, so instrumentation at any layer lands in one export.
+  :func:`enable`'s ``reset=True`` starts a clean capture.
+* **Import-light** — this package imports only stdlib + numpy; dataplane
+  modules can instrument without import cycles.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.obs import export as _export
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.tracing import Span, SpanRecord, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "SpanRecord",
+    "Tracer",
+    "disable",
+    "enable",
+    "enable_from_env",
+    "enabled",
+    "export_all",
+    "registry",
+    "reset",
+    "span",
+    "tracer",
+]
+
+OBS_ENV = "REPRO_OBS"           # truthy value enables at enable_from_env()
+OBS_DIR_ENV = "REPRO_OBS_DIR"   # export directory for harnesses that honor it
+
+_enabled = False
+_registry = MetricsRegistry()
+_tracer = Tracer()
+
+
+class _NullSpan:
+    """Shared do-nothing context manager — the disabled hot path."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def enabled() -> bool:
+    """Is the global observability switch on?"""
+    return _enabled
+
+
+def enable(*, reset: bool = False) -> None:
+    """Turn observability on (``reset=True`` starts a clean capture)."""
+    global _enabled
+    if reset:
+        globals()["_registry"] = MetricsRegistry()
+        _tracer.reset()
+    _enabled = True
+
+
+def disable() -> None:
+    """Turn observability off (captured state is kept for export)."""
+    global _enabled
+    _enabled = False
+
+
+def reset() -> None:
+    """Drop all captured metrics and spans (switch state unchanged)."""
+    globals()["_registry"] = MetricsRegistry()
+    _tracer.reset()
+
+
+def enable_from_env() -> bool:
+    """Enable iff ``$REPRO_OBS`` is set truthy; returns the switch state.
+
+    The hook harnesses use (``benchmarks/run.py``, CI) so a job can opt a
+    whole run into tracing without code changes.
+    """
+    val = os.environ.get(OBS_ENV, "").strip().lower()
+    if val not in ("", "0", "false", "no", "off"):
+        enable()
+    return _enabled
+
+
+def registry() -> MetricsRegistry:
+    """The process-wide metrics registry."""
+    return _registry
+
+
+def tracer() -> Tracer:
+    """The process-wide span tracer."""
+    return _tracer
+
+
+def span(name: str, cat: str = "span", **args):
+    """A timed span when enabled, a shared no-op otherwise."""
+    if not _enabled:
+        return _NULL_SPAN
+    return _tracer.span(name, cat, **args)
+
+
+def export_all(out_dir: str, *, prefix: str = "obs") -> dict[str, str]:
+    """Write metrics JSONL + Prometheus text + chrome trace to ``out_dir``
+    (see ``repro.obs.export.export_all``); returns the artifact paths."""
+    return _export.export_all(out_dir, _registry, _tracer, prefix=prefix)

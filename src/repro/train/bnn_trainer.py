@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bnn
 from repro.core.bnn import BnnSpec, binarize_ste
 from repro.core.export import ExportedModel, bit_weights_from_latent, export_latent
@@ -319,27 +320,68 @@ class BnnTrainer:
     # -- public -------------------------------------------------------------
 
     def train(self) -> dict:
-        """Run to ``cfg.steps`` (resuming from a checkpoint if one exists)."""
+        """Run to ``cfg.steps`` (resuming from a checkpoint if one exists).
+
+        Instrumented through ``repro.obs``: a ``compile:train_step`` span
+        around the first (jit-tracing) step, per-step latency into the
+        ``train.step_seconds`` histogram, and loss/accuracy gauges at log
+        points — all no-ops while observability is off.
+        """
         resumed = self._restore()
         start_step = self.step
+        observing = obs.enabled()
+        first = True
         t0 = time.perf_counter()
-        while self.step < self.cfg.steps:
-            x, y = self._batch(self.step)
-            self.latent, self.opt_state, metrics = self._step_fn(
-                self.latent, self.opt_state, x, y
-            )
-            self.step += 1
-            if (
-                self.step % self.cfg.log_every == 0
-                or self.step == 1
-                or self.step == self.cfg.steps
-            ):
-                self.history.append(
-                    {"step": self.step, **{k: float(v) for k, v in metrics.items()}}
-                )
-            if self.cfg.checkpoint_every and self.step % self.cfg.checkpoint_every == 0:
-                self._save()
-        jax.block_until_ready(self.latent)
+        with obs.span(
+            "stream:train_run", cat="stream",
+            start_step=start_step, steps=self.cfg.steps,
+        ):
+            while self.step < self.cfg.steps:
+                x, y = self._batch(self.step)
+                with obs.span(
+                    "compile:train_step" if first else "execute:train_step",
+                    cat="compile" if first else "execute",
+                    step=self.step,
+                ):
+                    s0 = time.perf_counter()
+                    self.latent, self.opt_state, metrics = self._step_fn(
+                        self.latent, self.opt_state, x, y
+                    )
+                    if observing:
+                        jax.block_until_ready(self.latent)
+                        step_dt = time.perf_counter() - s0
+                self.step += 1
+                if observing:
+                    m = obs.registry()
+                    m.counter("train.steps_total").inc()
+                    if first:
+                        m.histogram("train.compile_seconds").observe(step_dt)
+                    else:
+                        m.histogram("train.step_seconds").observe(step_dt)
+                first = False
+                if (
+                    self.step % self.cfg.log_every == 0
+                    or self.step == 1
+                    or self.step == self.cfg.steps
+                ):
+                    self.history.append(
+                        {
+                            "step": self.step,
+                            **{k: float(v) for k, v in metrics.items()},
+                        }
+                    )
+                    if observing:
+                        m = obs.registry()
+                        m.gauge("train.loss").set(float(metrics["loss"]))
+                        m.gauge("train.accuracy").set(
+                            float(metrics["accuracy"])
+                        )
+                if (
+                    self.cfg.checkpoint_every
+                    and self.step % self.cfg.checkpoint_every == 0
+                ):
+                    self._save()
+            jax.block_until_ready(self.latent)
         seconds = time.perf_counter() - t0
         self._save()
         ran = self.step - start_step
@@ -358,8 +400,18 @@ class BnnTrainer:
 
     def evaluate(self, x_bits, y) -> dict:
         """Accuracy of the deployed (binarized) network on labeled packets."""
-        bits = self.forward_bits(x_bits)[:, 0]
+        with obs.span(
+            "execute:train_eval", cat="execute",
+            packets=int(np.asarray(y).shape[0]),
+        ):
+            t0 = time.perf_counter()
+            bits = self.forward_bits(x_bits)[:, 0]
+            dt = time.perf_counter() - t0
         acc = float((bits == np.asarray(y)).mean())
+        if obs.enabled():
+            m = obs.registry()
+            m.histogram("train.eval_seconds").observe(dt)
+            m.gauge("train.eval_accuracy").set(acc)
         return {"accuracy": acc, "packets": int(np.asarray(y).shape[0])}
 
     def evaluate_held_out(self) -> dict:
