@@ -1,14 +1,17 @@
-"""Dataplane executor benchmark: fused op-table executor vs the legacy
-per-op interpreter vs the analytic ASIC model, per traffic scenario.
+"""Dataplane executor benchmark: bit-packed PHV executor vs fused op-table
+executor vs the legacy per-op interpreter vs the analytic ASIC model, per
+traffic scenario.
 
 Workload: the paper's headline model (32b activations, layers 64+32) over
 ``DATAPLANE_BENCH_PACKETS`` packets (default 1M; CI smoke sets it small).
-The fused executor streams every scenario end-to-end; the legacy interpreter
-— eager, op-by-op Python dispatch — is timed on a single chunk of the same
-size the fused path uses (its per-packet cost is batch-linear, and a full
-million packets through it would take minutes), and both are compared as
-packets/s.  The ``dataplane_speedup`` row is the PR's acceptance criterion:
-fused must be >= 10x legacy.
+The packed and fused executors stream every scenario end-to-end; the legacy
+interpreter — eager, op-by-op Python dispatch — is timed on a single chunk
+of the same size the fused path uses (its per-packet cost is batch-linear,
+and a full million packets through it would take minutes), and all are
+compared as packets/s.  Two acceptance rows gate regressions:
+``dataplane_speedup`` (fused >= 10x legacy) and ``dataplane_packed_speedup``
+(packed >= 5x fused — 32 activation bits per popcount lane instead of one
+per select-chain row).
 
 ``us_per_call`` is microseconds per 32768-packet chunk dispatch.
 """
@@ -66,6 +69,25 @@ def rows() -> list[tuple[str, float, str]]:
             )
         )
 
+    packed_pps = {}
+    for name in sorted(traffic.SCENARIOS):
+        sr = execute_stream(
+            lp,
+            traffic.stream(name, n_packets, 32, chunk_size=chunk),
+            chunk_size=chunk,
+            backend="packed",
+        )
+        packed_pps[name] = sr.packets_per_second
+        out.append(
+            (
+                f"dataplane_packed_{name}",
+                1e6 * sr.seconds / max(1, sr.chunks),
+                f"pps={sr.packets_per_second:.3e} packets={sr.packets} "
+                f"asic_gap={sr.packets_per_second / asic.packets_per_second:.2e} "
+                f"warmup_us={1e6 * sr.warmup_seconds:.0f}",
+            )
+        )
+
     # Legacy per-op interpreter: one chunk, same size, eager dispatch.
     x = jnp.asarray(traffic.generate("uniform_random", chunk, 32, seed=0))
     t0 = time.perf_counter()
@@ -92,6 +114,15 @@ def rows() -> list[tuple[str, float, str]]:
             0.0,
             f"fused/legacy={worst / legacy_pps:.1f}x..{best / legacy_pps:.1f}x "
             f"(acceptance: >=10x)",
+        )
+    )
+    ratios = [packed_pps[n] / fused_pps[n] for n in sorted(traffic.SCENARIOS)]
+    out.append(
+        (
+            "dataplane_packed_speedup",
+            0.0,
+            f"packed/fused={min(ratios):.1f}x..{max(ratios):.1f}x "
+            f"(acceptance: >=5x)",
         )
     )
     return out

@@ -72,23 +72,42 @@ def neuron_preact(x_bits: jax.Array, w_bits: jax.Array) -> jax.Array:
     return jnp.sum(agree, axis=-1)
 
 
-def layer_forward(x_bits: jax.Array, w_bits: jax.Array) -> jax.Array:
-    """One BNN layer: SIGN(popcount(XNOR) >= n_in/2), as {0,1} bits.
+def layer_forward(
+    x_bits: jax.Array, w_bits: jax.Array, thresholds=None
+) -> jax.Array:
+    """One BNN layer: SIGN(popcount(XNOR) >= thr), as {0,1} bits.
 
     Matches the paper's SIGN step: output bit is 1 iff the agreement count is
     >= half the activation-vector length.  Equivalent to
     ``sign(sum x_i*w_i) >= 0`` in ±1 arithmetic (2*pop - n >= 0).
+    ``thresholds`` (scalar or ``(n_out,)``) overrides the default
+    ``ceil(n_in/2)`` fire threshold — the learned-threshold variant the
+    compiler expresses through the SIGN immediate.
     """
     n_in = x_bits.shape[-1]
     pre = neuron_preact(x_bits, w_bits)
-    return (2 * pre >= n_in).astype(jnp.int32)
+    if thresholds is None:
+        return (2 * pre >= n_in).astype(jnp.int32)
+    return (pre >= jnp.asarray(thresholds)).astype(jnp.int32)
 
 
-def forward(params: Sequence[jax.Array], x_bits: jax.Array) -> jax.Array:
-    """Full BNN forward pass on {0,1} bit activations."""
+def forward(
+    params: Sequence[jax.Array], x_bits: jax.Array, thresholds=None
+) -> jax.Array:
+    """Full BNN forward pass on {0,1} bit activations.
+
+    ``thresholds`` optionally carries one entry per layer (``None``, scalar,
+    or ``(n_out,)``) mirroring ``compile_bnn(..., thresholds=...)``.
+    """
     h = x_bits
-    for w in params:
-        h = layer_forward(h, w)
+    if thresholds is None:
+        thresholds = [None] * len(params)
+    if len(thresholds) != len(params):
+        raise ValueError(
+            f"{len(thresholds)} threshold entries for {len(params)} layers"
+        )
+    for w, thr in zip(params, thresholds):
+        h = layer_forward(h, w, thr)
     return h
 
 

@@ -76,6 +76,38 @@ def _imm_from_bits(bits: np.ndarray) -> int:
     return int(sum(int(b) << i for i, b in enumerate(bits)))
 
 
+def _normalize_thresholds(
+    weights: Sequence[np.ndarray], thresholds: Sequence | None
+) -> list[np.ndarray]:
+    """Per-layer ``(n_out,)`` int32 SIGN thresholds, defaults filled in.
+
+    A neuron fires iff its XNOR-popcount agreement is ``>= thr``; the default
+    ``ceil(n_in/2)`` is the paper's SIGN (``sum >= 0`` in ±1 arithmetic).
+    """
+    if thresholds is None:
+        thresholds = [None] * len(weights)
+    if len(thresholds) != len(weights):
+        raise ValueError(
+            f"{len(thresholds)} threshold entries for {len(weights)} layers"
+        )
+    out = []
+    for li, (w, thr) in enumerate(zip(weights, thresholds)):
+        n_out, n_in = w.shape
+        if thr is None:
+            vec = np.full(n_out, (n_in + 1) // 2, np.int32)
+        else:
+            vec = np.broadcast_to(
+                np.asarray(thr, np.int64), (n_out,)
+            ).astype(np.int32)
+            if vec.size and (vec.min() < 0 or vec.max() > n_in + 1):
+                raise ValueError(
+                    f"layer {li}: thresholds must lie in [0, {n_in + 1}], "
+                    f"got [{vec.min()}, {vec.max()}]"
+                )
+        out.append(vec)
+    return out
+
+
 class Compiler:
     """Compiles a fully-connected BNN into a :class:`PipelineProgram`."""
 
@@ -84,16 +116,26 @@ class Compiler:
         self.alloc = PhvAllocator(chip.phv_bits)
         self.elements: list[Element] = []
         self.layer_plans: list[LayerPlan] = []
+        self._thresholds: list[np.ndarray] = []
 
     # -- public -------------------------------------------------------------
 
-    def compile(self, weights: Sequence[np.ndarray]) -> PipelineProgram:
+    def compile(
+        self,
+        weights: Sequence[np.ndarray],
+        thresholds: Sequence | None = None,
+    ) -> PipelineProgram:
+        """Compile weight bit-matrices; ``thresholds`` optionally overrides
+        the SIGN step's per-neuron fire threshold (default ``ceil(n_in/2)``)
+        — one entry per layer, each ``None``, a scalar, or ``(n_out,)`` ints
+        in ``[0, n_in + 1]``."""
         weights = [np.asarray(w, dtype=np.int64) for w in weights]
         for w in weights:
             if w.ndim != 2:
                 raise ValueError("each weight matrix must be (n_out, n_in)")
             if not np.isin(w, (0, 1)).all():
                 raise ValueError("weights must be {0,1} bit matrices")
+        self._thresholds = _normalize_thresholds(weights, thresholds)
 
         n_in = weights[0].shape[1]
         in_refs = [
@@ -121,6 +163,10 @@ class Compiler:
             output_bits=sum(r.width for r in acts),
             layer_plans=self.layer_plans,
             peak_phv_bits=self.alloc.peak_live_bits,
+            packed_layers=tuple(
+                (w.astype(np.uint8), thr)
+                for w, thr in zip(weights, self._thresholds)
+            ),
         )
         prog.validate()
         return prog
@@ -243,12 +289,15 @@ class Compiler:
             counts = self._emit_popcnt_hakmem(name, p, xn, in_refs)
 
         # ---- step 4: SIGN ---------------------------------------------------
-        thr = (n_in + 1) // 2  # popcount >= ceil(n_in/2)  <=>  sum >= 0
+        # Default: popcount >= ceil(n_in/2)  <=>  sum >= 0; learned per-neuron
+        # thresholds (compile(..., thresholds=...)) override per SIGN imm.
+        thr_vec = self._thresholds[li]
         a.free(counts)  # sign bits overlay the consumed count containers
         el = self._element("sign")
         signs = []
         for j in range(p):
             dst = a.alloc(f"{name}.s{j}", 1)
+            thr = int(thr_vec[neuron_base + j])
             el.add(Op(OpCode.GE_IMM, dst, (counts[j],), (thr,)))
             signs.append(dst)
 
@@ -442,10 +491,17 @@ class Compiler:
 
 
 def compile_bnn(
-    weights: Sequence[np.ndarray], chip: ChipSpec = RMT
+    weights: Sequence[np.ndarray],
+    chip: ChipSpec = RMT,
+    *,
+    thresholds: Sequence | None = None,
 ) -> PipelineProgram:
-    """Compile {0,1} weight bit-matrices into an RMT pipeline program."""
-    return Compiler(chip).compile(weights)
+    """Compile {0,1} weight bit-matrices into an RMT pipeline program.
+
+    ``thresholds`` optionally sets per-layer (scalar or per-neuron) SIGN fire
+    thresholds; the default is the paper's ``ceil(n_in/2)``.
+    """
+    return Compiler(chip).compile(weights, thresholds=thresholds)
 
 
 def compile_spec(

@@ -129,6 +129,12 @@ class PipelineProgram:
     output_bits: int
     layer_plans: list[LayerPlan]
     peak_phv_bits: int
+    # Optional per-layer (weight_bits (n_out, n_in) uint8, thresholds (n_out,)
+    # int32) metadata the compiler attaches so lowering can build a bit-packed
+    # execution plan (``dataplane.lowering.PackedProgram``).  Purely derived
+    # from data already hashed by ``fingerprint()`` (XNOR/GE immediates), so
+    # it does not participate in the hash.
+    packed_layers: tuple[tuple, ...] | None = None
 
     @property
     def num_elements(self) -> int:

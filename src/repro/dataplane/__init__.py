@@ -20,7 +20,13 @@ from repro.dataplane import (
 )
 from repro.dataplane.executor import DEFAULT_CHUNK, execute, execute_stream
 from repro.dataplane.fabric import MODES, SwitchFabric
-from repro.dataplane.lowering import LoweredProgram, lower_program
+from repro.dataplane.lowering import (
+    LoweredProgram,
+    PackedLayer,
+    PackedProgram,
+    lower_program,
+    pack_bit_rows,
+)
 from repro.dataplane.multitenant import (
     AdmissionError,
     SCHEDULER_MODES,
@@ -56,6 +62,8 @@ __all__ = [
     "FabricTelemetry",
     "LoweredProgram",
     "MODES",
+    "PackedLayer",
+    "PackedProgram",
     "PcapFormatError",
     "SCENARIOS",
     "SCHEDULER_MODES",
@@ -74,6 +82,7 @@ __all__ = [
     "mixed_tenant_generate",
     "mixed_tenant_stream",
     "multitenant",
+    "pack_bit_rows",
     "parse_headers",
     "pcap",
     "read_pcap",

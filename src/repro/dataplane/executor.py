@@ -13,7 +13,19 @@ Backends:
 * ``"jnp"``   — the scan executor above; production path on CPU.
 * ``"pallas"``— ``kernels.optable_exec`` kernel; production path on TPU,
   ``interpret=True`` elsewhere (tests).
+* ``"packed"``— bit-packed PHV path: activation bits are packed into uint32
+  lanes at parse time (``kernels.bitpack`` on TPU, scatter-add elsewhere)
+  and each neuron is one masked XNOR + ``population_count`` over 32 bits at
+  a time instead of 32 op-table rows.  Requires a
+  ``LoweredProgram.packed`` plan (compiler-built programs have one);
+  operates on whole packets, so it has no ``run_hop`` form.
 * ``"auto"``  — pallas on TPU, jnp otherwise (mirrors ``kernels.ops``).
+
+The op-table backends execute in *opcode runs* (``LoweredProgram.
+opcode_runs()``): consecutive elements sharing an opcode set are dispatched
+with an ALU narrowed to exactly those opcodes, so the branchless
+where-select chain collapses for the single-opcode elements the compiler
+emits.
 
 Streaming (:func:`execute_stream`) re-chunks any packet iterator into
 fixed-size blocks so millions of packets run at constant device memory and a
@@ -57,7 +69,7 @@ from repro.dataplane.lowering import LoweredProgram
 
 DEFAULT_CHUNK = 1 << 15  # 32768 packets per device dispatch
 
-_BACKENDS = ("auto", "jnp", "pallas")
+_BACKENDS = ("auto", "jnp", "pallas", "packed")
 
 
 def resolve_backend(backend: str = "auto") -> str:
@@ -79,7 +91,8 @@ class _DeviceTables:
     ops: tuple          # 7 (num_elements, max_rows) arrays for the scan
     first_write: jax.Array
     io: tuple           # in_slot, in_shift, out_slot, out_shift
-    used: tuple         # static dense-opcode set
+    used: tuple         # static dense-opcode set (union over all elements)
+    runs: tuple         # static (start, stop, used) opcode-homogeneous runs
 
 
 _TABLE_CACHE: dict[str, _DeviceTables] = {}
@@ -116,9 +129,80 @@ def _device_tables(lp: LoweredProgram) -> _DeviceTables:
                 jnp.asarray(lp.out_shift_per_bit),
             ),
             used=lp.used_opcodes(),
+            runs=lp.opcode_runs(),
         )
         _TABLE_CACHE[key] = t
     return t
+
+
+# ---------------------------------------------------------------------------
+# Bit-packed PHV path (the "packed" backend)
+# ---------------------------------------------------------------------------
+
+_PACKED_CACHE: dict[str, object] = {}
+
+
+def _packed_fn(lp: LoweredProgram):
+    """Compile ``lp.packed`` into a jitted (batch, input_bits) {0,1} ->
+    (batch, output_bits) int32 function, cached per program fingerprint.
+
+    Per layer: scatter the incoming bits into ``n_words`` uint32 PHV lanes
+    (via the ``kernels.bitpack`` pallas kernel on TPU when the layer has the
+    trivial contiguous layout, a one-hot scatter-add otherwise), then for
+    every neuron count agreements with one masked XNOR +
+    ``population_count`` per 32-bit word and compare against the SIGN
+    threshold.  Bit-exact with the op-table scan — the fuzz suite
+    (tests/test_differential_fuzz.py) holds the two together.
+    """
+    key = lp.fingerprint()
+    fn = _PACKED_CACHE.get(key)
+    if fn is not None:
+        return fn
+    pp = lp.packed
+    if pp is None:
+        raise ValueError(
+            "program has no bit-packed plan (LoweredProgram.packed is None "
+            "for hand-assembled tables and element slices); use the "
+            "op-table backends"
+        )
+    on_tpu = jax.default_backend() == "tpu"
+    layers = []
+    for pl_ in pp.layers:
+        trivial = bool(
+            np.array_equal(pl_.in_word, np.arange(pl_.n_in) // 32)
+            and np.array_equal(pl_.in_shift, np.arange(pl_.n_in) % 32)
+        )
+        layers.append((
+            jnp.asarray(pl_.weights),
+            jnp.asarray(pl_.thresholds),
+            jnp.asarray(pl_.mask),
+            jnp.asarray(pl_.in_word),
+            jnp.asarray(pl_.in_shift),
+            pl_.n_words,
+            trivial,
+        ))
+    layers = tuple(layers)
+
+    @jax.jit
+    def run(packets: jax.Array) -> jax.Array:
+        h = packets.astype(jnp.uint32)  # (batch, bits in neuron order)
+        for w, thr, mask, in_word, in_shift, n_words, trivial in layers:
+            if trivial and on_tpu:
+                from repro.kernels.bitpack import pack_bits_words
+
+                words = pack_bits_words(h)
+            else:
+                words = jnp.zeros((h.shape[0], n_words), jnp.uint32)
+                words = words.at[:, in_word].add(h << in_shift)
+            agree = jax.lax.population_count(
+                ~(words[:, None, :] ^ w[None, :, :]) & mask[None, :, :]
+            )
+            count = jnp.sum(agree, axis=-1, dtype=jnp.uint32)
+            h = (count >= thr[None, :]).astype(jnp.uint32)
+        return h.astype(jnp.int32)
+
+    _PACKED_CACHE[key] = run
+    return run
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +277,44 @@ def deparse_regs_routed(
     return ((words >> shifts) & jnp.uint32(1)).astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("total_bits",))
+def route_bits_in(
+    packets: jax.Array,
+    program_ids: jax.Array,
+    bit_table: jax.Array,
+    valid_table: jax.Array,
+    *,
+    total_bits: int,
+) -> jax.Array:
+    """Dense-bit analogue of :func:`parse_packets_routed` for the packed
+    backend: scatter each packet's bits to its program's window of a
+    ``(batch, total_bits)`` merged input-bit vector.
+
+    ``bit_table``/``valid_table`` are ``(num_programs, max_bits)``; invalid
+    (width-padding) entries carry index 0 and valid 0, so they add nothing.
+    """
+    pkt = packets.astype(jnp.uint32)
+    idx = jnp.take(bit_table, program_ids, axis=0)      # (batch, max_bits)
+    valid = jnp.take(valid_table, program_ids, axis=0)
+    out = jnp.zeros((packets.shape[0], total_bits), jnp.uint32)
+    cols = jnp.arange(packets.shape[0], dtype=jnp.int32)[:, None]
+    return out.at[cols, idx].add(pkt & valid)
+
+
+@jax.jit
+def route_bits_out(
+    bits: jax.Array,
+    program_ids: jax.Array,
+    bit_table: jax.Array,
+) -> jax.Array:
+    """Gather each packet's output bits back out of a merged dense bit
+    vector through its program's ``(num_programs, max_out_bits)`` routing
+    table.  Width-padding entries gather bit 0; callers slice them off per
+    tenant just as with :func:`deparse_regs_routed`."""
+    idx = jnp.take(bit_table, program_ids, axis=0)      # (batch, max_out)
+    return jnp.take_along_axis(bits, idx, axis=1).astype(jnp.int32)
+
+
 def alu_variants(r0, r1, i0, i1, used: tuple) -> list:
     """The dense-opcode ALU: ``[(code, value), ...]`` for the opcodes in
     ``used``.  Shared by the jnp scan executor and the Pallas kernel so both
@@ -252,21 +374,32 @@ def run_hop(
     ``fabric.SwitchFabric`` chains hops by threading it through here.
     """
     backend = resolve_backend(backend)
+    if backend == "packed":
+        raise ValueError(
+            "the packed backend consumes whole packets (execute / "
+            "execute_stream), not register-file hops"
+        )
     t = _device_tables(lowered)
     if backend == "pallas":
-        from repro.kernels.optable_exec import optable_run
+        from repro.kernels.optable_exec import optable_run_segmented
 
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        return optable_run(
-            regs, *t.ops, t.first_write, used=t.used, interpret=interpret
+        return optable_run_segmented(
+            regs, *t.ops, t.first_write, runs=t.runs, interpret=interpret
         )
-    return run_elements(regs, t.ops, used=t.used)
+    for start, stop, used in t.runs:
+        regs = run_elements(
+            regs, tuple(a[start:stop] for a in t.ops), used=used
+        )
+    return regs
 
 
 def _run_chunk(
     lp: LoweredProgram, packets: jax.Array, backend: str, interpret: bool | None
 ) -> jax.Array:
+    if backend == "packed":
+        return _packed_fn(lp)(packets)
     t = _device_tables(lp)
     in_slot, in_shift, out_slot, out_shift = t.io
     regs = parse_packets(packets, in_slot, in_shift, num_regs=lp.num_regs)

@@ -59,12 +59,143 @@ SHL_IMM = 4      # dst = src0 << imm0           (FOLD micro-op)
 POPCNT = 5       # dst = popcount(src0)
 
 DENSE_OPCODE_NAMES = ("xor", "shr_and", "add", "ge", "shl", "popcnt")
+NUM_DENSE_OPCODES = len(DENSE_OPCODE_NAMES)
 U32 = np.uint32
 FULL = np.uint32(0xFFFFFFFF)
+WORD = 32
 
 
 def _mask(width: int) -> np.uint32:
     return FULL if width >= 32 else U32((1 << width) - 1)
+
+
+def pack_bit_rows(bits: np.ndarray, n_words: int | None = None) -> np.ndarray:
+    """Pack ``(..., n)`` {0,1} bits into ``(..., n_words)`` uint32 words.
+
+    Little-endian within a word: logical bit ``k`` lands in word ``k // 32``
+    at shift ``k % 32`` — the packed-PHV word layout shared by the executor's
+    packed backend and ``kernels.bitpack`` (see docs/DATAPLANE.md).  Bits past
+    ``n`` are zero padding.
+    """
+    bits = np.asarray(bits)
+    n = bits.shape[-1]
+    words = n_words if n_words is not None else max(1, -(-n // WORD))
+    if words * WORD < n:
+        raise ValueError(f"{n} bits do not fit {words} words")
+    pad = words * WORD - n
+    b = np.pad(bits.astype(np.uint32), [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = b.reshape(bits.shape[:-1] + (words, WORD))
+    weights = U32(1) << np.arange(WORD, dtype=np.uint32)
+    return (b * weights).sum(axis=-1, dtype=np.uint64).astype(np.uint32)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedLayer:
+    """One BNN layer in bit-packed form: a packed weight matrix plus the
+    word layout its input bits occupy.
+
+    Execution contract (``executor`` packed backend): scatter the layer's
+    input bits into ``n_words`` uint32 lanes via ``in_word``/``in_shift``,
+    then per neuron ``j`` the agreement count is
+    ``popcount(~(x_words ^ weights[j]) & mask[j]).sum()`` and the output bit
+    is ``count >= thresholds[j]``.  ``mask`` zeroes padding lanes (x-pad and
+    w-pad are both 0, so unmasked ``~(0 ^ 0)`` would inflate counts) and, for
+    merged multi-tenant layers, every word outside the neuron's tenant
+    window.
+    """
+
+    weights: np.ndarray     # (n_out, n_words) uint32 packed weight bits
+    thresholds: np.ndarray  # (n_out,) uint32: fire iff agreement >= thr
+    mask: np.ndarray        # (n_out, n_words) uint32 valid-bit mask
+    in_word: np.ndarray     # (n_in,) int32: input bit k -> word index
+    in_shift: np.ndarray    # (n_in,) uint32: input bit k -> shift in word
+    n_in: int
+    n_out: int
+    n_words: int
+
+    @classmethod
+    def from_dense(cls, w_bits: np.ndarray, thresholds: np.ndarray) -> "PackedLayer":
+        """Pack a dense ``(n_out, n_in)`` {0,1} weight matrix with the
+        trivial contiguous word layout."""
+        w = np.asarray(w_bits)
+        if w.ndim != 2:
+            raise ValueError(f"weights must be (n_out, n_in), got {w.shape}")
+        n_out, n_in = w.shape
+        n_words = max(1, -(-n_in // WORD))
+        bit = np.arange(n_in)
+        mask_row = pack_bit_rows(np.ones((1, n_in), np.uint8), n_words)
+        return cls(
+            weights=pack_bit_rows(w, n_words),
+            thresholds=np.asarray(thresholds, np.uint32).reshape(n_out),
+            mask=np.broadcast_to(mask_row, (n_out, n_words)).copy(),
+            in_word=(bit // WORD).astype(np.int32),
+            in_shift=(bit % WORD).astype(np.uint32),
+            n_in=n_in,
+            n_out=n_out,
+            n_words=n_words,
+        )
+
+    @classmethod
+    def identity(cls, width: int) -> "PackedLayer":
+        """A pass-through layer: neuron ``j`` reproduces input bit ``j``
+        (single-bit weight, threshold 1).  Used to depth-pad shallower
+        tenants in a merged packed program."""
+        if width < 1:
+            raise ValueError(f"identity layer needs width >= 1, got {width}")
+        n_words = max(1, -(-width // WORD))
+        eye = np.zeros((width, n_words), np.uint32)
+        bit = np.arange(width)
+        eye[bit, bit // WORD] = U32(1) << (bit % WORD).astype(np.uint32)
+        return cls(
+            weights=eye,
+            thresholds=np.ones(width, np.uint32),
+            mask=eye.copy(),
+            in_word=(bit // WORD).astype(np.int32),
+            in_shift=(bit % WORD).astype(np.uint32),
+            n_in=width,
+            n_out=width,
+            n_words=n_words,
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackedProgram:
+    """A whole program as a chain of :class:`PackedLayer`s — the bit-packed
+    execution plan the ``"packed"`` executor backend runs instead of the
+    op-table scan.  Layer ``l``'s ``n_in`` equals layer ``l-1``'s total
+    ``n_out``; output bits are in neuron order (== deparser order == oracle
+    order)."""
+
+    layers: tuple[PackedLayer, ...]
+    input_bits: int
+    output_bits: int
+
+
+def _packed_program(prog: PipelineProgram) -> PackedProgram | None:
+    """Build the packed plan from compiler-attached layer metadata (weights
+    + SIGN thresholds); ``None`` when the program carries none (hand-built
+    programs, merged tables — those get plans elsewhere or fall back to the
+    op-table path)."""
+    meta = getattr(prog, "packed_layers", None)
+    if meta is None:
+        return None
+    layers = []
+    n_bits = prog.input_bits
+    for li, (w, thr) in enumerate(meta):
+        w = np.asarray(w)
+        if w.shape[1] != n_bits:
+            raise ValueError(
+                f"packed layer {li}: fan-in {w.shape[1]} != incoming "
+                f"{n_bits} bits"
+            )
+        layers.append(PackedLayer.from_dense(w, thr))
+        n_bits = w.shape[0]
+    if n_bits != prog.output_bits:
+        raise ValueError(
+            f"packed plan ends at {n_bits} bits; program outputs "
+            f"{prog.output_bits}"
+        )
+    return PackedProgram(tuple(layers), prog.input_bits, prog.output_bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +228,15 @@ class LoweredProgram:
     in_shift_per_bit: np.ndarray  # (input_bits,) uint32
     out_slot_per_bit: np.ndarray  # (output_bits,) int32
     out_shift_per_bit: np.ndarray  # (output_bits,) uint32
+
+    # (num_elements, NUM_DENSE_OPCODES) int32 — true-row opcode histogram per
+    # element (pads excluded).  Rows within an element are stably sorted by
+    # dense opcode (see lower_program), so opcode_runs() can hand executors
+    # opcode-homogeneous element ranges.  None for hand-assembled tables.
+    opcode_counts: np.ndarray | None = None
+    # Bit-packed execution plan (the "packed" backend); None when the source
+    # program carried no layer metadata or after element slicing.
+    packed: PackedProgram | None = None
 
     @property
     def num_elements(self) -> int:
@@ -145,6 +285,13 @@ class LoweredProgram:
             rows_per_element=rows,
             element_stages=self.element_stages[start:stop],
             num_ops=int(rows.sum()),
+            opcode_counts=(
+                None if self.opcode_counts is None
+                else self.opcode_counts[start:stop]
+            ),
+            # A slice is one hop of a layer-level plan; the whole-program
+            # packed shortcut no longer applies.
+            packed=None,
         )
 
     def with_slot_window(self, offset: int, total_slots: int) -> "LoweredProgram":
@@ -217,6 +364,47 @@ class LoweredProgram:
         present = set(np.unique(self.opcode).tolist())
         present.add(SHR_AND_IMM)
         return tuple(sorted(present))
+
+    def opcode_runs(
+        self, max_variants: int = 3
+    ) -> tuple[tuple[int, int, tuple[int, ...]], ...]:
+        """Opcode-homogeneous element runs for narrowed-ALU execution.
+
+        Returns ``(start_element, stop_element, used_opcodes)`` triples
+        covering ``[0, num_elements)`` in order.  Executors evaluate each run
+        with an ALU narrowed to that run's opcodes, killing the
+        branchless-select overhead of materialising all six variants per row
+        (the op-table scan's dominant cost for single-opcode elements, which
+        is what the compiler emits).  Elements carrying pad rows include
+        ``SHR_AND_IMM`` (the pad opcode) so padded rows still evaluate.
+
+        Consecutive elements coalesce greedily while the merged opcode set
+        stays within ``max_variants`` — the select chain stays short while
+        the dispatch/compile count stays bounded (a compiled BNN alternates
+        marshal/ADD elements; exact runs would mean one dispatch per
+        element).  Falls back to one whole-table run when ``opcode_counts``
+        is absent.
+        """
+        if self.opcode_counts is None:
+            return ((0, self.num_elements, self.used_opcodes()),)
+        has_pad = self.rows_per_element < self.max_rows
+        runs: list[tuple[int, int, tuple[int, ...]]] = []
+        start = 0
+        cur: frozenset[int] | None = None
+        for e in range(self.num_elements):
+            used = frozenset(np.nonzero(self.opcode_counts[e])[0].tolist())
+            if has_pad[e] or not used:
+                used |= {SHR_AND_IMM}
+            if cur is None:
+                cur, start = used, e
+            elif not (used <= cur) and len(cur | used) > max_variants:
+                runs.append((start, e, tuple(sorted(cur))))
+                cur, start = used, e
+            else:
+                cur = cur | used
+        if cur is not None:
+            runs.append((start, self.num_elements, tuple(sorted(cur))))
+        return tuple(runs)
 
     def summary(self) -> str:
         return (
@@ -363,10 +551,21 @@ def lower_program(prog: PipelineProgram, compact: bool = True) -> LoweredProgram
 
     per_element_rows: list[list[tuple]] = []
     stages: list[str] = []
-    for el in prog.elements:
+    opcode_counts = np.zeros((num_el, NUM_DENSE_OPCODES), np.int32)
+    for e, el in enumerate(prog.elements):
         rows: list[tuple] = []
         for op in el.ops:
             rows.extend(_lower_op(op, slot_map, null))
+        # Opcode-sorted segments: within an element every row reads the
+        # *incoming* register state and writes its own destination, so row
+        # order is free — except FOLD continuation rows (first_write=0),
+        # which must follow their first_write row on the sequential-write
+        # Pallas path.  All of a FOLD's micro-rows share opcode SHL and
+        # Python's sort is stable, so sorting by opcode preserves that order
+        # while giving opcode_runs() homogeneous segments.
+        rows.sort(key=lambda r: r[0])
+        for r in rows:
+            opcode_counts[e, r[0]] += 1
         per_element_rows.append(rows)
         stages.append(el.stage)
 
@@ -419,4 +618,6 @@ def lower_program(prog: PipelineProgram, compact: bool = True) -> LoweredProgram
         in_shift_per_bit=np.array(in_shift, np.uint32),
         out_slot_per_bit=np.array(out_slot, np.int32),
         out_shift_per_bit=np.array(out_shift, np.uint32),
+        opcode_counts=opcode_counts,
+        packed=_packed_program(prog),
     )

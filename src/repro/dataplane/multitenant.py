@@ -57,7 +57,12 @@ from repro import obs
 from repro.core.pipeline import RMT, ChipSpec, PipelineProgram
 from repro.dataplane import executor as _executor
 from repro.dataplane import telemetry as _telemetry
-from repro.dataplane.lowering import LoweredProgram, lower_program
+from repro.dataplane.lowering import (
+    LoweredProgram,
+    PackedLayer,
+    PackedProgram,
+    lower_program,
+)
 
 SCHEDULER_MODES = ("auto", "merged", "time_sliced")
 DEFAULT_QUANTUM = 4096
@@ -101,10 +106,100 @@ class MergedProgram:
     out_shift: np.ndarray                    # (T, max_out_bits) uint32
     in_bits: np.ndarray                      # (T,) int32 true input widths
     out_bits: np.ndarray                     # (T,) int32 true output widths
+    # Packed-backend routing (None when any tenant lacks a packed plan):
+    # per-tenant indices into the merged dense input/output bit vectors
+    # consumed by executor.route_bits_in / route_bits_out.  Width-padding
+    # entries are 0 (masked by in_valid on the way in, sliced off by
+    # ``out_bits`` on the way out).
+    packed_in_bit: np.ndarray | None = None   # (T, max_in_bits) int32
+    packed_out_bit: np.ndarray | None = None  # (T, max_out_bits) int32
 
     @property
     def num_tenants(self) -> int:
         return len(self.slot_windows)
+
+
+def _merge_packed(
+    lowereds: Sequence[LoweredProgram], max_in: int, max_out: int
+):
+    """Fuse per-tenant packed plans into one block-diagonal plan.
+
+    Tenants shallower than the deepest are depth-padded with
+    :class:`PackedLayer.identity` layers so every tenant's bits traverse the
+    same number of merged layers.  Per merged layer, each tenant occupies a
+    word-aligned window: weights/mask are block-diagonal over the word axis
+    (mask zeros outside the window, so foreign lanes contribute nothing),
+    thresholds concatenate, and ``in_word`` shifts by the tenant's word
+    offset.  Layer ``l``'s merged input-bit order is the concatenation of
+    tenant layer-``l`` inputs — exactly layer ``l-1``'s concatenated output
+    order, so the layers chain without any inter-layer routing.
+
+    Returns ``(PackedProgram, packed_in_bit, packed_out_bit)`` or
+    ``(None, None, None)`` when any tenant has no packed plan.
+    """
+    plans = [lp.packed for lp in lowereds]
+    if any(p is None for p in plans):
+        return None, None, None
+    depth = max(len(p.layers) for p in plans)
+    per_tenant: list[list[PackedLayer]] = []
+    for p in plans:
+        layers = list(p.layers)
+        while len(layers) < depth:
+            layers.append(PackedLayer.identity(p.output_bits))
+        per_tenant.append(layers)
+
+    t_count = len(per_tenant)
+    merged_layers = []
+    for li in range(depth):
+        parts = [per_tenant[t][li] for t in range(t_count)]
+        word_off = np.concatenate(
+            ([0], np.cumsum([pl.n_words for pl in parts]))
+        )
+        total_words = int(word_off[-1])
+        n_out_total = sum(pl.n_out for pl in parts)
+        weights = np.zeros((n_out_total, total_words), np.uint32)
+        mask = np.zeros((n_out_total, total_words), np.uint32)
+        row = 0
+        for t, pl in enumerate(parts):
+            lo, hi = int(word_off[t]), int(word_off[t + 1])
+            weights[row : row + pl.n_out, lo:hi] = pl.weights
+            mask[row : row + pl.n_out, lo:hi] = pl.mask
+            row += pl.n_out
+        merged_layers.append(PackedLayer(
+            weights=weights,
+            mask=mask,
+            thresholds=np.concatenate([pl.thresholds for pl in parts]),
+            in_word=np.concatenate([
+                pl.in_word + np.int32(word_off[t])
+                for t, pl in enumerate(parts)
+            ]).astype(np.int32),
+            in_shift=np.concatenate([pl.in_shift for pl in parts]),
+            n_in=sum(pl.n_in for pl in parts),
+            n_out=n_out_total,
+            n_words=total_words,
+        ))
+
+    in_off = np.concatenate(
+        ([0], np.cumsum([t[0].n_in for t in per_tenant]))
+    )
+    out_off = np.concatenate(
+        ([0], np.cumsum([t[-1].n_out for t in per_tenant]))
+    )
+    packed_in_bit = np.zeros((t_count, max_in), np.int32)
+    packed_out_bit = np.zeros((t_count, max_out), np.int32)
+    for t, layers in enumerate(per_tenant):
+        packed_in_bit[t, : layers[0].n_in] = in_off[t] + np.arange(
+            layers[0].n_in, dtype=np.int32
+        )
+        packed_out_bit[t, : layers[-1].n_out] = out_off[t] + np.arange(
+            layers[-1].n_out, dtype=np.int32
+        )
+    pp = PackedProgram(
+        layers=tuple(merged_layers),
+        input_bits=int(in_off[-1]),
+        output_bits=int(out_off[-1]),
+    )
+    return pp, packed_in_bit, packed_out_bit
 
 
 def merge_lowered(
@@ -135,6 +230,13 @@ def merge_lowered(
 
     def cat(field: str) -> np.ndarray:
         return np.concatenate([getattr(p, field) for p in parts], axis=0)
+
+    counts = [p.opcode_counts for p in parts]
+    packed_plan, packed_in_bit, packed_out_bit = _merge_packed(
+        lowereds,
+        int(max(lp.input_bits for lp in lowereds)),
+        int(max(lp.output_bits for lp in lowereds)),
+    )
 
     merged = LoweredProgram(
         source_fingerprint=(
@@ -167,6 +269,12 @@ def merge_lowered(
         in_shift_per_bit=np.zeros(0, np.uint32),
         out_slot_per_bit=np.zeros(0, np.int32),
         out_shift_per_bit=np.zeros(0, np.uint32),
+        opcode_counts=(
+            None
+            if any(c is None for c in counts)
+            else np.concatenate(counts, axis=0)
+        ),
+        packed=packed_plan,
     )
 
     max_in = merged.input_bits
@@ -201,6 +309,8 @@ def merge_lowered(
         out_shift=out_shift,
         in_bits=np.array([lp.input_bits for lp in lowereds], np.int32),
         out_bits=np.array([lp.output_bits for lp in lowereds], np.int32),
+        packed_in_bit=packed_in_bit,
+        packed_out_bit=packed_out_bit,
     )
 
 
@@ -486,17 +596,37 @@ class SwitchScheduler:
         width = mp.in_slot.shape[1]
         collected: list[list[np.ndarray]] = [[] for _ in self.tenants]
 
-        def push(tids_dev, bits_dev):
-            regs = _executor.parse_packets_routed(
-                bits_dev, tids_dev, in_slot, in_shift, in_valid,
-                num_regs=lp.num_regs,
-            )
-            regs = _executor.run_hop(
-                lp, regs, backend=backend, interpret=interpret
-            )
-            return _executor.deparse_regs_routed(
-                regs, tids_dev, out_slot, out_shift
-            )
+        if backend == "packed":
+            if lp.packed is None or mp.packed_in_bit is None:
+                raise ValueError(
+                    "packed backend needs every tenant to carry a packed "
+                    "plan (compiler-built programs do); use an op-table "
+                    "backend"
+                )
+            pk_in = jnp.asarray(mp.packed_in_bit)
+            pk_out = jnp.asarray(mp.packed_out_bit)
+            pk_total = lp.packed.input_bits
+
+            def push(tids_dev, bits_dev):
+                dense = _executor.route_bits_in(
+                    bits_dev, tids_dev, pk_in, in_valid,
+                    total_bits=pk_total,
+                )
+                res = _executor._packed_fn(lp)(dense)
+                return _executor.route_bits_out(res, tids_dev, pk_out)
+
+        else:
+            def push(tids_dev, bits_dev):
+                regs = _executor.parse_packets_routed(
+                    bits_dev, tids_dev, in_slot, in_shift, in_valid,
+                    num_regs=lp.num_regs,
+                )
+                regs = _executor.run_hop(
+                    lp, regs, backend=backend, interpret=interpret
+                )
+                return _executor.deparse_regs_routed(
+                    regs, tids_dev, out_slot, out_shift
+                )
 
         seconds = 0.0
         warmup = 0.0

@@ -136,3 +136,38 @@ def optable_run(
         regs,
     )
     return out[:, :batch] if pad else out
+
+
+def optable_run_segmented(
+    regs: jax.Array,
+    opcode: jax.Array,
+    dst: jax.Array,
+    src0: jax.Array,
+    src1: jax.Array,
+    imm0: jax.Array,
+    imm1: jax.Array,
+    mask: jax.Array,
+    first_write: jax.Array,
+    *,
+    runs: tuple[tuple[int, int, tuple[int, ...]], ...],
+    block_b: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run opcode-homogeneous element segments back to back.
+
+    ``runs`` is ``LoweredProgram.opcode_runs()``: static ``(start, stop,
+    used)`` element ranges.  Bit-identical to one :func:`optable_run` over
+    the whole table with the union used-set — but each segment's kernel
+    specializes ``alu_variants`` to that segment's opcodes, collapsing the
+    per-row where-select chain to (usually) a single expression.
+    """
+    for start, stop, used in runs:
+        regs = optable_run(
+            regs,
+            opcode[start:stop], dst[start:stop],
+            src0[start:stop], src1[start:stop],
+            imm0[start:stop], imm1[start:stop],
+            mask[start:stop], first_write[start:stop],
+            used=used, block_b=block_b, interpret=interpret,
+        )
+    return regs

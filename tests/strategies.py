@@ -1,0 +1,237 @@
+"""Shared generators for the differential fuzz suite.
+
+Random BNN programs (layer widths, SIGN thresholds, folding), random chunked
+streams, and random :class:`ChipSpec` budgets, expressed against the small
+strategy surface that both real ``hypothesis`` and ``tests/_hypothesis_stub``
+provide (``integers`` / ``lists`` / ``sampled_from`` / ``map`` / ``flatmap``)
+— so the suite runs shrunk-and-replayed under hypothesis when it is
+installed and degrades gracefully to the seeded-random stub when it is not.
+
+Cases are lightweight hashable descriptions (:class:`ProgramCase`); the
+expensive compile/lower step is memoized in :func:`build_case` so the
+per-backend test functions that draw identical cases share one build.
+
+The ``FUZZ_EXAMPLES`` env var widens/narrows the example count (CI pins it);
+``FUZZ_ARTIFACT_DIR`` makes :func:`artifact_on_failure` persist failing-case
+reprs for upload.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import os
+import pathlib
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    from _hypothesis_stub import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = False
+
+from repro.core.compiler import compile_bnn
+from repro.core.pipeline import ChipSpec
+
+__all__ = [
+    "BuiltProgram",
+    "HAVE_HYPOTHESIS",
+    "HEAVY_EXAMPLES",
+    "ProgramCase",
+    "artifact_on_failure",
+    "build_case",
+    "chip_specs",
+    "given",
+    "packets_for",
+    "program_cases",
+    "settings",
+    "st",
+    "stream_plans",
+]
+
+MAX_WIDTH = 48  # keeps compiles fast while still crossing the 32-bit word
+THRESHOLD_MODES = ("default", "scalar", "per_neuron")
+_SEED_MAX = 2**31 - 1
+
+# Cap for the expensive compound properties (streaming, multi-tenant): they
+# re-compile per drawn shape, so they run fewer examples than the cheap
+# single-program properties.  Widen with FUZZ_EXAMPLES_HEAVY.
+HEAVY_EXAMPLES = min(
+    int(os.environ.get("FUZZ_EXAMPLES", 5)),
+    int(os.environ.get("FUZZ_EXAMPLES_HEAVY", 3)),
+)
+
+
+def _register_fuzz_profile() -> None:
+    # Default is sized for the tier-1 run (every program shape drawn is a
+    # fresh jit compile); the CI fuzz job pins FUZZ_EXAMPLES=200.
+    examples = int(os.environ.get("FUZZ_EXAMPLES", 5))
+    kwargs: dict = {"max_examples": examples}
+    if HAVE_HYPOTHESIS:
+        # Pinned, replayable CI runs: no wall-clock deadline flakes, no
+        # example database coupling between runs, full repr on failure.
+        kwargs.update(
+            derandomize=True, deadline=None, database=None, print_blob=True
+        )
+    settings.register_profile("fuzz", **kwargs)
+    settings.load_profile("fuzz")
+
+
+_register_fuzz_profile()
+
+
+# ---------------------------------------------------------------------------
+# Cases + memoized builds
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProgramCase:
+    """A random-BNN-program description: everything needed to rebuild the
+    weights, thresholds, and compiled program deterministically."""
+
+    layer_sizes: tuple[int, ...]
+    weight_seed: int
+    threshold_mode: str  # one of THRESHOLD_MODES
+    threshold_seed: int
+
+
+@dataclasses.dataclass(eq=False)
+class BuiltProgram:
+    """A compiled + lowered :class:`ProgramCase`."""
+
+    case: ProgramCase
+    params: list[np.ndarray]          # {0,1} (n_out, n_in) per layer
+    thresholds: list | None           # None, or per-layer scalar/(n_out,)
+    program: object                   # PipelineProgram
+    lowered: object                   # LoweredProgram
+
+
+@functools.lru_cache(maxsize=256)
+def build_case(case: ProgramCase) -> BuiltProgram:
+    """Weights/thresholds from the case seeds -> compiled + lowered program.
+
+    Thresholds cover the full legal range ``[0, n_in + 1]`` — including the
+    never-fire and always-fire edges — per layer, scalar or per-neuron.
+    """
+    rng = np.random.default_rng(case.weight_seed)
+    sizes = case.layer_sizes
+    params = [
+        rng.integers(0, 2, (sizes[i + 1], sizes[i])).astype(np.int32)
+        for i in range(len(sizes) - 1)
+    ]
+    if case.threshold_mode == "default":
+        thresholds = None
+    else:
+        trng = np.random.default_rng(case.threshold_seed)
+        thresholds = []
+        for w in params:
+            n_out, n_in = w.shape
+            if case.threshold_mode == "scalar":
+                thresholds.append(int(trng.integers(0, n_in + 2)))
+            else:
+                thresholds.append(
+                    trng.integers(0, n_in + 2, n_out).astype(np.int32)
+                )
+    program = compile_bnn(params, thresholds=thresholds)
+    return BuiltProgram(
+        case=case,
+        params=params,
+        thresholds=thresholds,
+        program=program,
+        lowered=program.lower(),
+    )
+
+
+def packets_for(case: ProgramCase, seed: int, n: int) -> np.ndarray:
+    """Deterministic ``(n, input_bits)`` {0,1} packets for a case."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2, (n, case.layer_sizes[0])).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+def layer_size_lists(
+    min_layers: int = 1, max_layers: int = 3, max_width: int = MAX_WIDTH
+):
+    """Layer-width tuples ``(input, h1, ..., out)`` with 1..max_width bits —
+    deliberately including widths not divisible by 32 and width-1 edges."""
+    widths = st.integers(min_value=1, max_value=max_width)
+    return st.integers(min_value=min_layers, max_value=max_layers).flatmap(
+        lambda n: st.lists(widths, min_size=n + 1, max_size=n + 1).map(tuple)
+    )
+
+
+def program_cases(
+    min_layers: int = 1, max_layers: int = 3, max_width: int = MAX_WIDTH
+):
+    """Random :class:`ProgramCase`s: widths x weights x threshold modes."""
+    seeds = st.integers(min_value=0, max_value=_SEED_MAX)
+    return layer_size_lists(min_layers, max_layers, max_width).flatmap(
+        lambda sizes: seeds.flatmap(
+            lambda wseed: st.sampled_from(THRESHOLD_MODES).flatmap(
+                lambda mode: seeds.map(
+                    lambda tseed: ProgramCase(sizes, wseed, mode, tseed)
+                )
+            )
+        )
+    )
+
+
+def stream_plans(max_packets: int = 300, max_chunk: int = 64):
+    """``(n_packets, chunk_size, packet_seed)`` plans for chunking-invariance
+    and mid-stream-resume tests; chunk sizes that divide, straddle, and
+    exceed the packet count all occur."""
+    return st.integers(min_value=1, max_value=max_packets).flatmap(
+        lambda n: st.integers(min_value=1, max_value=max_chunk).flatmap(
+            lambda c: st.integers(min_value=0, max_value=_SEED_MAX).map(
+                lambda seed: (n, c, seed)
+            )
+        )
+    )
+
+
+def chip_specs(
+    min_elements: int = 4,
+    max_elements: int = 96,
+    min_phv: int = 256,
+    max_phv: int = 8192,
+):
+    """Random chip budgets (element count x PHV bits).  Small budgets are
+    *meant* to reject some programs — admission/validation fuzz checks that
+    rejection is a clean typed error, never a wrong answer."""
+    return st.integers(min_value=min_elements, max_value=max_elements).flatmap(
+        lambda elems: st.integers(min_value=min_phv, max_value=max_phv).map(
+            lambda phv: ChipSpec(
+                num_elements=elems,
+                phv_bits=phv,
+                name=f"fuzz-{elems}el-{phv}b",
+            )
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Failure artifacts
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def artifact_on_failure(test_name: str, case):
+    """Re-raise any failure after appending the failing case's repr to
+    ``$FUZZ_ARTIFACT_DIR/<test_name>.txt`` (CI uploads that directory), so a
+    red fuzz run always ships its reproducer."""
+    try:
+        yield
+    except BaseException:
+        art_dir = os.environ.get("FUZZ_ARTIFACT_DIR")
+        if art_dir:
+            path = pathlib.Path(art_dir)
+            path.mkdir(parents=True, exist_ok=True)
+            with open(path / f"{test_name}.txt", "a") as fh:
+                fh.write(f"{case!r}\n")
+        raise
