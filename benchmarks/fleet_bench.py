@@ -1,0 +1,166 @@
+"""Fleet serving benchmark: aggregate packets/s vs. fleet size.
+
+The paper's claim is per-chip line rate; this module measures what one HOST
+can simulate when many independent switches are batched through one
+compiled executor (``repro.dataplane.fleet``).  Per-stream chunks are kept
+SMALL (``FLEET_BENCH_CHUNK``, default 16 packets — the low-latency serving
+regime): a lone stream at that chunk size is dispatch-bound, which is
+exactly the orchestration starvation the fleet amortizes by folding N
+streams into one ``(N, chunk, bits)`` dispatch.
+
+Rows (packed backend throughout — the production path):
+
+* ``dataplane_fleet_single_pps`` — one stream, ``execute_stream``;
+* ``dataplane_fleet_<S>``        — fleet of S vmapped streams, geometric S
+  up to ``FLEET_BENCH_STREAMS`` (default 10240 — the 10k-switches-on-one-
+  host target; CI smoke sets 64);
+* ``dataplane_fleet_agg_pps``    — the CI gate row: the 64-stream fleet
+  aggregate, with ``speedup=`` vs single-stream (acceptance: >= 8x);
+* ``dataplane_fleet_pipeline``   — ``serving.engine.FleetEngine``'s async
+  ingest/execute pipeline over the same fleet (``overlap=`` is busy/wall);
+* ``dataplane_fabric_scanned`` / ``_unrolled`` — a deep hop chain through
+  ``SwitchFabric`` with the hop loop as one ``lax.scan`` vs. per-hop Python
+  dispatch (same bits out either way; the scan removes ``hops`` dispatches
+  per chunk).
+
+Every ``pps=`` value lands under ``tools/check_bench_regression.py``, which
+also derives ``pps_per_stream`` for rows that carry a ``streams=`` count.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import bnn, compile_bnn
+from repro.core.pipeline import ChipSpec
+from repro.dataplane import execute_stream, lower_program
+from repro.dataplane.fabric import SwitchFabric
+from repro.dataplane.fleet import execute_fleet
+from repro.dataplane.plan import ExecutionPlan
+from repro.serving.engine import FleetEngine
+
+GATE_STREAMS = 64      # the acceptance-criterion fleet size
+FABRIC_PACKETS = 8192  # hop-chain comparison workload
+BLOCKS = 20            # fleet blocks per measurement
+
+
+def _fleet_sizes(max_streams: int) -> list[int]:
+    sizes = []
+    s = 4
+    while s < max_streams:
+        sizes.append(s)
+        s *= 4
+    sizes.append(max_streams)
+    return sizes
+
+
+def rows() -> list[tuple[str, float, str]]:
+    import jax
+
+    max_streams = int(os.environ.get("FLEET_BENCH_STREAMS", 10_240))
+    chunk = int(os.environ.get("FLEET_BENCH_CHUNK", 16))
+
+    spec = bnn.BnnSpec((32, 64, 32))
+    params = bnn.init_params(spec, jax.random.PRNGKey(0))
+    prog = compile_bnn([np.asarray(w) for w in params])
+    lp = lower_program(prog)
+    n = chunk * BLOCKS
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2, (n, 32)).astype(np.int32)
+
+    out = []
+
+    # -- one stream at the fleet's per-stream chunk: dispatch-bound --------
+    # 10x the fleet workload per stream: at 16-packet dispatches the row is
+    # all fixed overhead, so it needs more samples than the batched rows.
+    x1 = np.tile(x, (10, 1))
+    sr = execute_stream(lp, iter([x1]), backend="packed", chunk_size=chunk)
+    sr = execute_stream(lp, iter([x1]), backend="packed", chunk_size=chunk)
+    single_pps = sr.packets_per_second
+    out.append(
+        (
+            "dataplane_fleet_single_pps",
+            1e6 * sr.seconds / max(1, sr.chunks),
+            f"pps={single_pps:.3e} streams=1 chunk={chunk} "
+            f"warmup_us={1e6 * sr.warmup_seconds:.0f}",
+        )
+    )
+
+    # -- aggregate pps vs fleet size ---------------------------------------
+    gate_pps = None
+    for s in _fleet_sizes(max_streams):
+        streams = [x] * s  # replicas: identical load per simulated switch
+        plan = ExecutionPlan(backend="packed", chunk_size=chunk)
+        fr = execute_fleet(lp, streams, plan=plan)
+        fr = execute_fleet(lp, streams, plan=plan)
+        out.append(
+            (
+                f"dataplane_fleet_{s}",
+                1e6 * fr.seconds / max(1, fr.chunks),
+                f"pps={fr.packets_per_second:.3e} streams={s} "
+                f"chunk={chunk} warmup_us={1e6 * fr.warmup_seconds:.0f}",
+            )
+        )
+        if s == GATE_STREAMS:
+            gate_pps = fr.packets_per_second
+    if gate_pps is None:  # max_streams < 64: measure the gate size anyway
+        fr = execute_fleet(
+            lp,
+            [x] * GATE_STREAMS,
+            plan=ExecutionPlan(backend="packed", chunk_size=chunk),
+        )
+        gate_pps = fr.packets_per_second
+    out.append(
+        (
+            "dataplane_fleet_agg_pps",
+            0.0,
+            f"pps={gate_pps:.3e} streams={GATE_STREAMS} chunk={chunk} "
+            f"speedup={gate_pps / single_pps:.1f} "
+            f"(acceptance: >=8x single-stream)",
+        )
+    )
+
+    # -- async ingest/execute pipeline over the gate-size fleet ------------
+    eng = FleetEngine(
+        lp, plan=ExecutionPlan(backend="packed", chunk_size=chunk)
+    )
+    pr = eng.serve([x] * GATE_STREAMS)
+    pr = eng.serve([x] * GATE_STREAMS)
+    out.append(
+        (
+            "dataplane_fleet_pipeline",
+            1e6 * pr.wall_seconds / max(1, pr.chunks),
+            f"pps={pr.packets_per_second:.3e} streams={GATE_STREAMS} "
+            f"overlap={pr.overlap_ratio:.2f} "
+            f"ingest_us={1e6 * pr.ingest_seconds:.0f} "
+            f"warmup_us={1e6 * pr.warmup_seconds:.0f}",
+        )
+    )
+
+    # -- scanned vs unrolled hop chain -------------------------------------
+    hop_chip = ChipSpec(
+        num_elements=max(1, prog.num_elements // 12),
+        phv_bits=prog.chip.phv_bits,
+        name="bench/hop",
+    )
+    fab = SwitchFabric.partition(prog, mode="multi_hop", chip=hop_chip)
+    fx = rng.integers(0, 2, (FABRIC_PACKETS, 32)).astype(np.int32)
+    for label, scan in (("scanned", True), ("unrolled", False)):
+        fres = fab.run(fx, backend="jnp", chunk_size=4096, scan_hops=scan)
+        fres = fab.run(fx, backend="jnp", chunk_size=4096, scan_hops=scan)
+        out.append(
+            (
+                f"dataplane_fabric_{label}",
+                1e6 * fres.seconds,
+                f"pps={fres.packets_per_second:.3e} hops={fab.num_hops} "
+                f"packets={fres.packets} "
+                f"warmup_us={1e6 * fres.warmup_seconds:.0f}",
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.2f},{derived}")

@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV:
                         MULTITENANT_BENCH_PACKETS tune)
   * pcap_bench        — capture write/read + header-featurizer throughput
                         (PCAP_BENCH_PACKETS tunes the capture size)
+  * fleet_bench       — aggregate pkts/s vs fleet size: N vmapped streams
+                        through one compiled dispatch, plus the async
+                        serving pipeline and scanned-vs-unrolled hop chains
+                        (FLEET_BENCH_STREAMS / FLEET_BENCH_CHUNK tune)
 
 Besides the CSV, each module's rows land in ``BENCH_<module>.json`` (in
 ``BENCH_OUT_DIR``, default cwd) with every ``key=<float>`` pair from the
@@ -91,6 +95,7 @@ def write_bench_json(out_dir: str, module: str, seconds: float, rows) -> str:
 def main() -> None:
     from benchmarks import (
         dataplane_bench,
+        fleet_bench,
         kernel_bench,
         multitenant_bench,
         obs_overhead_bench,
@@ -116,6 +121,7 @@ def main() -> None:
         train_deploy_bench,
         multitenant_bench,
         pcap_bench,
+        fleet_bench,
         obs_overhead_bench,
     ]
     failures = 0

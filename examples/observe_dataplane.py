@@ -23,32 +23,30 @@ Smoke: PYTHONPATH=src python examples/observe_dataplane.py --smoke --out obs_out
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import numpy as np
 
 from repro import obs
-from repro.core import bnn, compile_bnn
-from repro.core.pipeline import ChipSpec
 from repro.dataplane import (
-    SwitchScheduler,
-    TenantTrafficSpec,
+    FleetSpec,
+    TenantSpec,
+    build_fleet,
     execute_stream,
     lower_program,
-    mixed_tenant_stream,
     traffic,
 )
 
-_TENANTS = (
-    ("ddos", (32, 64, 32), "ddos_burst", 2.0),
-    ("iot", (16, 32, 8), "iot_telemetry", 1.0),
-    ("flows", (32, 16), "flow_tuple", 1.0),
-)
+_SPEC = FleetSpec(tenants=(
+    TenantSpec("ddos", scenario="ddos_burst", shape=(32, 64, 32), weight=2.0,
+               seed=0),
+    TenantSpec("iot", scenario="iot_telemetry", shape=(16, 32, 8), seed=1),
+    TenantSpec("flows", scenario="flow_tuple", shape=(32, 16), seed=2),
+))
 
 
 def main() -> int:
-    import jax
-
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--packets", type=int, default=60_000)
     ap.add_argument("--out", default="obs_out", help="artifact directory")
@@ -66,21 +64,13 @@ def main() -> int:
         if not ok:
             failures.append(what)
 
-    # -- tenants: three independently compiled BNNs sharing one chip -------
-    progs, specs = [], []
-    for i, (name, shape, scenario, weight) in enumerate(_TENANTS):
-        params = bnn.init_params(bnn.BnnSpec(shape), jax.random.PRNGKey(i))
-        progs.append(compile_bnn([np.asarray(w) for w in params]))
-        specs.append(TenantTrafficSpec(scenario, shape[0], weight))
-    chip = ChipSpec(
-        num_elements=sum(p.num_elements for p in progs) + 1,
-        phv_bits=sum(p.peak_phv_bits for p in progs),
-        name="shared",
-    )
+    # -- tenants: three independently compiled BNNs sharing one chip, all
+    # constructed from the one declarative spec above -----------------------
+    fleet = build_fleet(dataclasses.replace(_SPEC, quantum=chunk))
 
     # -- 1. bit-exactness: observability must not touch the data ----------
     print("== 1. bit-exactness (obs off vs on) ==")
-    lp = lower_program(progs[0])
+    lp = lower_program(fleet.programs[0])
 
     def one_stream():
         return execute_stream(
@@ -103,11 +93,9 @@ def main() -> int:
     # -- 2. traced multi-tenant run (obs stays enabled, registry kept) ----
     print("== 2. traced multi-tenant run ==")
     for mode in ("merged", "time_sliced"):
-        sched = SwitchScheduler(chip, quantum=chunk)
-        for i, (name, _, _, weight) in enumerate(_TENANTS):
-            sched.admit(progs[i], name=name, weight=weight)
+        sched = fleet.scheduler()
         res = sched.run(
-            mixed_tenant_stream(specs, n, chunk_size=chunk, seed=7),
+            fleet.stream(n, chunk_size=chunk, seed=7),
             mode=mode,
             backend="jnp",
             chunk_size=chunk,
@@ -144,7 +132,7 @@ def main() -> int:
     ]
     gate(
         {(r["labels"]["tenant"]) for r in qdelay}
-        >= {name for name, *_ in _TENANTS},
+        >= {t.name for t in _SPEC.tenants},
         f"per-tenant queue-delay histograms exported ({len(qdelay)} tenants)",
     )
     gate(all(r.get("p50") is not None and r.get("p99") is not None

@@ -25,16 +25,13 @@ Smoke: PYTHONPATH=src python examples/pcap_replay.py --smoke
 from __future__ import annotations
 
 import argparse
-import math
 import os
 import tempfile
 
 import numpy as np
 
-from repro.core import bnn, compile_bnn
 from repro.core.export import verify_roundtrip
-from repro.core.pipeline import RMT, ChipSpec
-from repro.dataplane import SwitchScheduler, pcap, traffic
+from repro.dataplane import FleetSpec, TenantSpec, build_fleet, pcap, traffic
 from repro.train.bnn_trainer import BnnTrainConfig, BnnTrainer, make_capture_task
 
 ACCURACY_FLOOR = 0.95
@@ -106,13 +103,21 @@ def main() -> None:
 
     print(f"\n== 4. deploy ({FABRIC_HOPS}-hop switch fabric) ==")
     exported = trainer.export()
-    n_elements = exported.program.num_elements
-    hop_chip = ChipSpec(
-        phv_bits=RMT.phv_bits,
-        num_elements=math.ceil(n_elements / FABRIC_HOPS),
-        name=f"rmt/{FABRIC_HOPS}hop",
+    # One declarative spec builds the whole serving stack — the trained
+    # export as the pcap-replay tenant plus two synthetic tenants — and
+    # also hands out the deploy fabric for the export's program.
+    traffic.register_scenario(
+        pcap.pcap_scenario(cap, name=SCENARIO_NAME), overwrite=True
     )
-    fab = exported.fabric(mode="multi_hop", chip=hop_chip)
+    fleet = build_fleet(FleetSpec(tenants=(
+        TenantSpec(f"t0:{SCENARIO_NAME}", scenario=SCENARIO_NAME,
+                   program=exported.program, weight=2.0),
+        TenantSpec("t1:iot_telemetry", scenario="iot_telemetry",
+                   shape=(32, 16, 4), seed=100),
+        TenantSpec("t2:ddos_burst", scenario="ddos_burst",
+                   shape=(24, 12, 4), seed=101),
+    )))
+    fab = fleet.fabric(0, hops=FABRIC_HOPS)
     report = verify_roundtrip(
         exported,
         trainer.eval_x,
@@ -127,33 +132,11 @@ def main() -> None:
         failures.append(f"expected {FABRIC_HOPS} hops, got {report.hops}")
 
     print("\n== 5. serve (3 tenants on one chip, one pcap-backed) ==")
-    traffic.register_scenario(
-        pcap.pcap_scenario(cap, name=SCENARIO_NAME), overwrite=True
-    )
-    others = []
-    for i, shape in enumerate(((32, 16, 4), (24, 12, 4))):
-        params = bnn.init_params(bnn.BnnSpec(shape), _key(i))
-        others.append(compile_bnn([np.asarray(w) for w in params]))
-    progs = [exported.program] + others
-    specs = [
-        traffic.TenantTrafficSpec(SCENARIO_NAME, input_bits, 2.0),
-        traffic.TenantTrafficSpec("iot_telemetry", 32, 1.0),
-        traffic.TenantTrafficSpec("ddos_burst", 24, 1.0),
-    ]
-    chip = ChipSpec(
-        num_elements=sum(p.num_elements for p in progs) + 1,
-        phv_bits=sum(p.peak_phv_bits for p in progs),
-        name="shared",
-    )
     stream_n = 2 * n
     for mode in ("merged", "time_sliced"):
-        sched = SwitchScheduler(chip, mode=mode)
-        for i, (prog, spec) in enumerate(zip(progs, specs)):
-            sched.admit(prog, name=f"t{i}:{spec.scenario}", weight=spec.weight)
+        sched = fleet.scheduler(mode=mode)
         res = sched.run(
-            traffic.mixed_tenant_stream(
-                specs, stream_n, chunk_size=4096, seed=args.seed
-            ),
+            fleet.stream(stream_n, chunk_size=4096, seed=args.seed),
             chunk_size=4096,
         )
         print(sched.telemetry(res).render())
@@ -179,12 +162,6 @@ def main() -> None:
     if failures:
         raise SystemExit("ACCEPTANCE FAILED: " + "; ".join(failures))
     print("acceptance: OK (file round trip, fabric + scheduler bit-exact)")
-
-
-def _key(i: int):
-    import jax
-
-    return jax.random.PRNGKey(100 + i)
 
 
 if __name__ == "__main__":

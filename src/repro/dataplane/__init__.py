@@ -5,27 +5,44 @@ dense op-tables (``lowering``), executed fused and batched (``executor``,
 with a Pallas kernel in ``kernels.optable_exec``), fed from a traffic
 scenario library (``traffic``) or from real capture files (``pcap``),
 scaled past one chip's element budget by a simulated multi-switch fabric
-with per-stage telemetry (``fabric``, ``telemetry``), and shared between
+with per-stage telemetry (``fabric``, ``telemetry``), shared between
 independently compiled programs by a multi-tenant scheduler
-(``multitenant``).
+(``multitenant``), and batched fleet-wide — N independent streams through
+one vmapped/shard_map-ed dispatch (``fleet``).
+
+The one entry point that reaches every executor is :func:`run` with a typed
+:class:`ExecutionPlan` (``plan``); the per-module keyword surfaces remain
+as thin shims.
 """
 from repro.dataplane import (
     executor,
     fabric,
+    factory,
+    fleet,
     lowering,
     multitenant,
     pcap,
+    plan,
     telemetry,
     traffic,
 )
 from repro.dataplane.executor import DEFAULT_CHUNK, execute, execute_stream
 from repro.dataplane.fabric import MODES, SwitchFabric
+from repro.dataplane.factory import Fleet, FleetSpec, TenantSpec, build_fleet
+from repro.dataplane.fleet import (
+    DEFAULT_STREAM_CHUNK,
+    FleetRunResult,
+    execute_fleet,
+    fleet_fn,
+)
 from repro.dataplane.lowering import (
     LoweredProgram,
     PackedLayer,
     PackedProgram,
+    StackedHops,
     lower_program,
     pack_bit_rows,
+    stack_hops,
 )
 from repro.dataplane.multitenant import (
     AdmissionError,
@@ -43,6 +60,7 @@ from repro.dataplane.pcap import (
     write_pcap,
     write_pcapng,
 )
+from repro.dataplane.plan import Backend, ExecutionPlan, run
 from repro.dataplane.telemetry import FabricTelemetry, stage_telemetry
 from repro.dataplane.traffic import (
     SCENARIOS,
@@ -57,9 +75,15 @@ from repro.dataplane.traffic import (
 
 __all__ = [
     "AdmissionError",
+    "Backend",
     "Capture",
     "DEFAULT_CHUNK",
+    "DEFAULT_STREAM_CHUNK",
+    "ExecutionPlan",
     "FabricTelemetry",
+    "Fleet",
+    "FleetRunResult",
+    "FleetSpec",
     "LoweredProgram",
     "MODES",
     "PackedLayer",
@@ -67,14 +91,21 @@ __all__ = [
     "PcapFormatError",
     "SCENARIOS",
     "SCHEDULER_MODES",
+    "StackedHops",
     "SwitchFabric",
     "SwitchScheduler",
+    "TenantSpec",
     "TenantTrafficSpec",
+    "build_fleet",
     "execute",
+    "execute_fleet",
     "execute_stream",
     "executor",
     "fabric",
+    "factory",
     "featurize",
+    "fleet",
+    "fleet_fn",
     "generate",
     "get_scenario",
     "lower_program",
@@ -85,9 +116,12 @@ __all__ = [
     "pack_bit_rows",
     "parse_headers",
     "pcap",
+    "plan",
     "read_pcap",
     "register_pcap_scenario",
     "register_scenario",
+    "run",
+    "stack_hops",
     "stage_telemetry",
     "stream",
     "synthesize_capture",

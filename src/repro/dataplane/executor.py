@@ -70,9 +70,25 @@ from repro.dataplane.lowering import LoweredProgram
 DEFAULT_CHUNK = 1 << 15  # 32768 packets per device dispatch
 
 _BACKENDS = ("auto", "jnp", "pallas", "packed")
+_BACKEND_ALIASES = {"fused": "jnp"}
 
 
-def resolve_backend(backend: str = "auto") -> str:
+def resolve_backend(backend="auto") -> str:
+    """Normalize a backend choice to an executor backend string.
+
+    Accepts the legacy strings, their aliases (``"fused"`` == ``"jnp"``),
+    and :class:`repro.dataplane.plan.Backend` members — the typed
+    :class:`~repro.dataplane.plan.ExecutionPlan` surface and the string
+    keyword surface stay interchangeable.
+    """
+    backend = getattr(backend, "value", backend)  # plan.Backend -> str
+    backend = _BACKEND_ALIASES.get(backend, backend)
+    if backend == "interpreter":
+        raise ValueError(
+            "the interpreter backend is a reference path, not an executor: "
+            "reach it through repro.dataplane.run(program, packets, "
+            "plan=ExecutionPlan(backend=Backend.INTERPRETER))"
+        )
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
     if backend != "auto":
@@ -205,6 +221,71 @@ def _packed_fn(lp: LoweredProgram):
     return run
 
 
+_PACKED_SCAN_CACHE: dict[str, object] = {}
+
+
+def _packed_scan_fn(lp: LoweredProgram):
+    """Scan-over-layers variant of the packed executor.
+
+    Layers are padded to common shapes and stacked
+    (``lowering.stack_packed_layers``), then the whole network runs as ONE
+    ``lax.scan`` over the layer axis: the layer body compiles once however
+    deep the network is — the recirculation analogue for the packed
+    backend (each scan step is one hop's worth of packed compute carried in
+    the packet's bit vector).  Bit-exact with :func:`_packed_fn` because
+    padding is inert by construction (zero masks, unreachable thresholds);
+    the differential fuzz suite holds the two together.
+    """
+    key = lp.fingerprint()
+    fn = _PACKED_SCAN_CACHE.get(key)
+    if fn is not None:
+        return fn
+    if lp.packed is None:
+        raise ValueError(
+            "program has no bit-packed plan (LoweredProgram.packed is None "
+            "for hand-assembled tables and element slices); use the "
+            "op-table backends"
+        )
+    sp = lowering.stack_packed_layers(lp.packed)
+    stacked = (
+        jnp.asarray(sp.weights),
+        jnp.asarray(sp.thresholds),
+        jnp.asarray(sp.mask),
+        jnp.asarray(sp.in_word),
+        jnp.asarray(sp.in_shift),
+    )
+    max_bits, max_words = sp.max_bits, sp.max_words
+    out_bits = sp.output_bits
+
+    @jax.jit
+    def run(packets: jax.Array) -> jax.Array:
+        h = packets.astype(jnp.uint32)
+        pad = max_bits - h.shape[1]
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad)))
+
+        def layer(h, tbl):
+            w, thr, mask, in_word, in_shift = tbl
+            words = jnp.zeros((h.shape[0], max_words), jnp.uint32)
+            # Pad input bits carry 0 (outputs past a layer's true width
+            # never fire), so their word-0 scatter adds nothing.
+            words = words.at[:, in_word].add(h << in_shift)
+            agree = jax.lax.population_count(
+                ~(words[:, None, :] ^ w[None, :, :]) & mask[None, :, :]
+            )
+            count = jnp.sum(agree, axis=-1, dtype=jnp.uint32)
+            nxt = (count >= thr[None, :]).astype(jnp.uint32)
+            if max_bits > nxt.shape[1]:
+                nxt = jnp.pad(nxt, ((0, 0), (0, max_bits - nxt.shape[1])))
+            return nxt, None
+
+        h, _ = jax.lax.scan(layer, h, stacked)
+        return h[:, :out_bits].astype(jnp.int32)
+
+    _PACKED_SCAN_CACHE[key] = run
+    return run
+
+
 # ---------------------------------------------------------------------------
 # Parser / ALU scan / deparser (jnp backend)
 # ---------------------------------------------------------------------------
@@ -331,13 +412,13 @@ def alu_variants(r0, r1, i0, i1, used: tuple) -> list:
     return [(code, expr()) for code, expr in table if code in used]
 
 
-@functools.partial(jax.jit, static_argnames=("used",))
-def run_elements(regs: jax.Array, tables: tuple, *, used: tuple):
-    """Scan the op-table over the register file (the fused inner loop).
+def _element_scan(regs: jax.Array, tables: tuple, used: tuple) -> jax.Array:
+    """The fused inner loop body: scan the op-table over the register file.
 
-    ``regs``: (num_regs, batch).  ``used`` is the static tuple of dense
-    opcodes present, so the branchless ALU only materializes variants the
-    program can select.
+    Traceable (not jitted here) so both :func:`run_elements` and the
+    stacked-hop scan (:func:`run_hops_scanned`) compile the SAME element
+    step — bit-exactness between the unrolled and scanned fabric paths is
+    by shared construction, then fuzz-proven.
     """
 
     def step(regs, tbl):
@@ -359,6 +440,93 @@ def run_elements(regs: jax.Array, tables: tuple, *, used: tuple):
 
     regs, _ = jax.lax.scan(step, regs, tables)
     return regs
+
+
+@functools.partial(jax.jit, static_argnames=("used",))
+def run_elements(regs: jax.Array, tables: tuple, *, used: tuple):
+    """Scan the op-table over the register file (the fused inner loop).
+
+    ``regs``: (num_regs, batch).  ``used`` is the static tuple of dense
+    opcodes present, so the branchless ALU only materializes variants the
+    program can select.
+    """
+    return _element_scan(regs, tables, used)
+
+
+@functools.partial(jax.jit, static_argnames=("used",))
+def _run_hops_stacked(regs: jax.Array, tables: tuple, *, used: tuple):
+    """Nested scan: hops on the outside, elements inside — the whole fabric
+    chain as ONE compiled dispatch over ``(H, E, rows)`` stacked tables."""
+
+    def hop(regs, tbl):
+        return _element_scan(regs, tbl, used), None
+
+    regs, _ = jax.lax.scan(hop, regs, tables)
+    return regs
+
+
+_STACKED_CACHE: dict[tuple, object] = {}
+
+
+def run_hops_scanned(
+    stacked,
+    regs: jax.Array,
+    *,
+    backend: str = "jnp",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Run a :class:`~repro.dataplane.lowering.StackedHops` chain over parsed
+    register files as a single ``lax.scan`` over the hop axis.
+
+    Bit-exact with calling :func:`run_hop` per hop slice: the scan body IS
+    the shared element step (op-table backends) or the Pallas kernel with
+    the hop tables as scan-carried operands.  The union opcode set trades
+    the per-run ALU narrowing of the unrolled path for one compiled body —
+    results are identical either way.
+    """
+    backend = resolve_backend(backend)
+    if backend == "packed":
+        raise ValueError(
+            "the packed backend scans layers, not register-file hops "
+            "(see execute(..., scan_hops=True))"
+        )
+    if backend == "pallas" and interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    key = (stacked.fingerprint, backend, bool(interpret))
+    entry = _STACKED_CACHE.get(key)
+    if entry is None:
+        tables = tuple(
+            jnp.asarray(getattr(stacked, name))
+            for name in (
+                "opcode", "dst", "src0", "src1", "imm0", "imm1", "mask",
+            )
+        )
+        first_write = jnp.asarray(stacked.first_write)
+        used = stacked.used
+        if backend == "pallas":
+            from repro.kernels.optable_exec import optable_run
+
+            interp = bool(interpret)
+
+            @jax.jit
+            def scanned(regs, tabs, fw):
+                def hop(regs, tbl):
+                    t, f = tbl
+                    return (
+                        optable_run(regs, *t, f, used=used, interpret=interp),
+                        None,
+                    )
+
+                regs, _ = jax.lax.scan(hop, regs, (tabs, fw))
+                return regs
+
+            entry = (lambda r: scanned(r, tables, first_write))
+        else:
+            entry = (
+                lambda r: _run_hops_stacked(r, tables, used=used)
+            )
+        _STACKED_CACHE[key] = entry
+    return entry(regs)
 
 
 def run_hop(
@@ -396,10 +564,15 @@ def run_hop(
 
 
 def _run_chunk(
-    lp: LoweredProgram, packets: jax.Array, backend: str, interpret: bool | None
+    lp: LoweredProgram,
+    packets: jax.Array,
+    backend: str,
+    interpret: bool | None,
+    scan_hops: bool = False,
 ) -> jax.Array:
     if backend == "packed":
-        return _packed_fn(lp)(packets)
+        fn = _packed_scan_fn(lp) if scan_hops else _packed_fn(lp)
+        return fn(packets)
     t = _device_tables(lp)
     in_slot, in_shift, out_slot, out_shift = t.io
     regs = parse_packets(packets, in_slot, in_shift, num_regs=lp.num_regs)
@@ -418,12 +591,16 @@ def execute(
     backend: str = "auto",
     chunk_size: int | None = None,
     interpret: bool | None = None,
+    scan_hops: bool = False,
 ) -> np.ndarray:
     """Run ``packets`` (N, input_bits) {0,1} through the program.
 
     Returns (N, output_bits) int32, bit-exact with
     ``interpreter.run_program``.  Batches larger than ``chunk_size`` stream
     in fixed-size chunks (constant device memory, one compiled executable).
+    ``scan_hops=True`` runs the packed backend's scan-over-layers plan
+    (``_packed_scan_fn``) instead of the unrolled layer loop; op-table
+    backends ignore it (their hop structure lives in ``fabric``).
     """
     packets = np.asarray(packets)
     if packets.ndim != 2 or packets.shape[1] != lowered.input_bits:
@@ -435,7 +612,9 @@ def execute(
     n = packets.shape[0]
     chunk = chunk_size or DEFAULT_CHUNK
     if n <= chunk:
-        return np.asarray(_run_chunk(lowered, jnp.asarray(packets), backend, interpret))[:n]
+        return np.asarray(
+            _run_chunk(lowered, jnp.asarray(packets), backend, interpret, scan_hops)
+        )[:n]
 
     out = np.empty((n, lowered.output_bits), np.int32)
     for start in range(0, n, chunk):
@@ -443,7 +622,7 @@ def execute(
         pad = chunk - block.shape[0]
         if pad:
             block = np.pad(block, ((0, pad), (0, 0)))
-        res = _run_chunk(lowered, jnp.asarray(block), backend, interpret)
+        res = _run_chunk(lowered, jnp.asarray(block), backend, interpret, scan_hops)
         out[start : start + chunk] = np.asarray(res)[: chunk - pad]
     return out
 
@@ -491,6 +670,7 @@ def execute_stream(
     chunk_size: int = DEFAULT_CHUNK,
     collect: bool = False,
     interpret: bool | None = None,
+    scan_hops: bool = False,
 ) -> StreamResult:
     """Stream a packet-chunk iterator through the executor.
 
@@ -524,12 +704,14 @@ def execute_stream(
                 ):
                     w0 = time.perf_counter()
                     _run_chunk(
-                        lowered, dev, backend, interpret
+                        lowered, dev, backend, interpret, scan_hops
                     ).block_until_ready()
                     warmup = time.perf_counter() - w0
             with obs.span("execute:stream_chunk", cat="execute", packets=n):
                 t0 = time.perf_counter()
-                res = np.asarray(_run_chunk(lowered, dev, backend, interpret))
+                res = np.asarray(
+                    _run_chunk(lowered, dev, backend, interpret, scan_hops)
+                )
                 dt = time.perf_counter() - t0
             seconds += dt
             res = res[:n]

@@ -16,6 +16,20 @@ Both modes execute identically bit-for-bit (the register file is the wire
 format between hops); they differ in the telemetry/throughput accounting —
 which is exactly the trade the paper's §2 discussion is about.
 
+Hop chains execute **scanned by default**: the hop slices are padded and
+stacked (``lowering.stack_hops``) and the whole chain runs as one
+``lax.scan`` over the hop axis — the hop body compiles once however long
+the chain is, and per-chunk orchestration drops from ``num_hops`` Python
+dispatches to one.  The unrolled per-hop loop remains behind
+``scan_hops=False`` (and as the automatic fallback when hop shapes
+genuinely differ and refuse to stack); the two paths are bit-exact by
+shared construction and fuzz-proven in ``tests/test_fleet.py``.  The
+packed backend — previously unreachable from the fabric — runs as the
+scan-over-layers plan on whole packets.  In scanned runs the per-hop
+wall-clock split is *attributed*: measured chunk time is divided across
+hops proportionally to their element counts (one dispatch cannot be
+timed per hop), keeping the ``hop_seconds``/telemetry shape contract.
+
 Invariants:
 
 * **Bit-exactness** — ``SwitchFabric.run`` equals single-switch
@@ -43,7 +57,13 @@ from repro.core.pipeline import ChipSpec, PipelineProgram
 from repro.core.throughput import report_for_program
 from repro.dataplane import executor as _executor
 from repro.dataplane import telemetry as _telemetry
-from repro.dataplane.lowering import LoweredProgram, lower_program
+from repro.dataplane.lowering import (
+    LoweredProgram,
+    StackedHops,
+    lower_program,
+    stack_hops,
+)
+from repro.dataplane.plan import ExecutionPlan
 
 MODES = ("recirculate", "multi_hop")
 
@@ -62,8 +82,9 @@ class FabricRunResult:
     outputs: np.ndarray          # (n, output_bits) int32
     packets: int
     seconds: float
-    hop_seconds: list[float]
+    hop_seconds: list[float]     # attributed by element count when scanned
     warmup_seconds: float = 0.0  # whole-chain warm call (incl. jit compile)
+    scanned: bool = False        # hops ran as one lax.scan dispatch
 
     @property
     def packets_per_second(self) -> float:
@@ -88,6 +109,7 @@ class SwitchFabric:
         self.chip = chip
         self._last_run: FabricRunResult | None = None
         self._analytic_memo = None
+        self._stacked_memo: StackedHops | None | str = "unset"
 
     # -- construction -------------------------------------------------------
 
@@ -126,6 +148,15 @@ class SwitchFabric:
     def num_hops(self) -> int:
         return len(self.hops)
 
+    def stacked_hops(self) -> StackedHops | None:
+        """The chain's hop slices padded + stacked for ``lax.scan``, memoized
+        (hops are fixed at partition time).  ``None`` when hop shapes
+        genuinely differ and refuse to stack — the scanned path then falls
+        back to unrolled dispatch."""
+        if isinstance(self._stacked_memo, str):
+            self._stacked_memo = stack_hops([h.lowered for h in self.hops])
+        return self._stacked_memo
+
     # -- execution ----------------------------------------------------------
 
     def run(
@@ -135,9 +166,27 @@ class SwitchFabric:
         backend: str = "auto",
         chunk_size: int | None = None,
         interpret: bool | None = None,
+        scan_hops: bool | None = None,
+        plan: ExecutionPlan | None = None,
     ) -> FabricRunResult:
         """Push packets through every hop; bit-exact with single-switch
-        :func:`dataplane.executor.execute` (and the interpreter/oracle)."""
+        :func:`dataplane.executor.execute` (and the interpreter/oracle).
+
+        ``plan`` (an :class:`~repro.dataplane.plan.ExecutionPlan`) overrides
+        the individual keywords — the legacy keyword surface remains as a
+        shim.  ``scan_hops``: True/None run the chain as one ``lax.scan``
+        over stacked hop tables (None falls back to unrolled only when the
+        hops refuse to stack); False forces the unrolled per-hop loop.  The
+        packed backend always runs scanned (it has no per-hop form).
+        """
+        if plan is not None:
+            backend = plan.backend_str
+            if plan.chunk_size is not None:
+                chunk_size = plan.chunk_size
+            if plan.interpret is not None:
+                interpret = plan.interpret
+            if plan.scan_hops is not None:
+                scan_hops = plan.scan_hops
         backend = _executor.resolve_backend(backend)
         packets = np.asarray(packets)
         if packets.ndim != 2 or packets.shape[1] != self.lowered.input_bits:
@@ -153,34 +202,80 @@ class SwitchFabric:
         lp = self.lowered
         in_slot, in_shift, out_slot, out_shift = _executor._device_tables(lp).io
 
-        def push(block: jax.Array, warm: bool = False) -> jax.Array:
-            regs = _executor.parse_packets(
-                block, in_slot, in_shift, num_regs=lp.num_regs
-            )
-            for hop in self.hops:
-                with obs.span(
-                    "compile:hop" if warm else "execute:hop",
-                    cat="compile" if warm else "execute",
-                    hop=hop.index, mode=self.mode,
-                ):
-                    h0 = time.perf_counter()
-                    # The register file leaving this hop is the PHV on the
-                    # wire.
-                    regs = _executor.run_hop(
-                        hop.lowered, regs, backend=backend, interpret=interpret
-                    )
-                    regs.block_until_ready()
-                    h_dt = time.perf_counter() - h0
-                hop_seconds[hop.index] += h_dt
-                if obs.enabled() and not warm:
-                    obs.registry().histogram(
-                        "fabric.hop_seconds", hop=str(hop.index)
-                    ).observe(h_dt)
-            return _executor.deparse_regs(regs, out_slot, out_shift)
+        stacked = None
+        if backend == "packed":
+            if scan_hops is False:
+                raise ValueError(
+                    "the packed backend has no per-hop register-file form; "
+                    "the fabric runs it as one scan over stacked layers "
+                    "(scan_hops=True or None)"
+                )
+            scanned = True
+        else:
+            if scan_hops is not False:
+                stacked = self.stacked_hops()
+            scanned = stacked is not None
+
+        # Wall-clock attribution for the scanned path: one dispatch cannot
+        # be timed per hop, so chunk time is split proportionally to each
+        # hop's element count (exact for the unrolled path by measurement).
+        elems = np.array(
+            [stop - start for (start, stop) in
+             (h.element_range for h in self.hops)],
+            np.float64,
+        )
+        hop_weights = elems / elems.sum()
+
+        if scanned and backend == "packed":
+            packed_run = _executor._packed_scan_fn(lp)
+
+            def push(block: jax.Array, warm: bool = False) -> jax.Array:
+                return packed_run(block)
+
+        elif scanned:
+
+            def push(block: jax.Array, warm: bool = False) -> jax.Array:
+                regs = _executor.parse_packets(
+                    block, in_slot, in_shift, num_regs=lp.num_regs
+                )
+                # One lax.scan carries the PHV through every hop's tables.
+                regs = _executor.run_hops_scanned(
+                    stacked, regs, backend=backend, interpret=interpret
+                )
+                return _executor.deparse_regs(regs, out_slot, out_shift)
+
+        else:
+
+            def push(block: jax.Array, warm: bool = False) -> jax.Array:
+                regs = _executor.parse_packets(
+                    block, in_slot, in_shift, num_regs=lp.num_regs
+                )
+                for hop in self.hops:
+                    with obs.span(
+                        "compile:hop" if warm else "execute:hop",
+                        cat="compile" if warm else "execute",
+                        hop=hop.index, mode=self.mode,
+                    ):
+                        h0 = time.perf_counter()
+                        # The register file leaving this hop is the PHV on
+                        # the wire.
+                        regs = _executor.run_hop(
+                            hop.lowered, regs,
+                            backend=backend, interpret=interpret,
+                        )
+                        regs.block_until_ready()
+                        h_dt = time.perf_counter() - h0
+                    hop_seconds[hop.index] += h_dt
+                    if obs.enabled() and not warm:
+                        obs.registry().histogram(
+                            "fabric.hop_seconds", hop=str(hop.index)
+                        ).observe(h_dt)
+                return _executor.deparse_regs(regs, out_slot, out_shift)
 
         with obs.span(
             "stream:fabric_run", cat="stream",
             mode=self.mode, hops=self.num_hops, packets=n, backend=backend,
+            scanned=scanned,
         ):
             # Warm every hop's compiled executable outside the clock (each
             # hop slice has its own table shapes), so measured pkt/s reflects
@@ -213,10 +308,18 @@ class SwitchFabric:
                     dt = time.perf_counter() - t0
                 total += dt
                 out[start : start + valid] = res[:valid]
+                if scanned:
+                    for i, w in enumerate(hop_weights):
+                        hop_seconds[i] += dt * w
                 if obs.enabled():
                     m = obs.registry()
                     m.counter("fabric.packets_total").inc(valid)
                     m.histogram("fabric.chunk_seconds").observe(dt)
+                    if scanned:
+                        for i, w in enumerate(hop_weights):
+                            m.histogram(
+                                "fabric.hop_seconds", hop=str(i)
+                            ).observe(dt * w)
 
         result = FabricRunResult(
             outputs=out,
@@ -224,6 +327,7 @@ class SwitchFabric:
             seconds=total,
             hop_seconds=hop_seconds,
             warmup_seconds=warmup,
+            scanned=scanned,
         )
         self._last_run = result
         return result

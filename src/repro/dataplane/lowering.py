@@ -415,6 +415,160 @@ class LoweredProgram:
 
 
 # ---------------------------------------------------------------------------
+# Stacked execution plans (scan-over-hops / scan-over-layers)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StackedHops:
+    """Fabric-hop tables stacked on a leading hop axis.
+
+    The executor compiles the hop body ONCE and runs all hops as a single
+    ``lax.scan`` over this stack (one device dispatch per chunk instead of
+    one per hop) — the scan-over-layers idiom applied to switch chains.
+    Hops shorter than ``elements_per_hop`` are element-padded with whole
+    no-op elements (every row the standard pad row: ``SHR_AND`` writing 0 to
+    the null register), so padding can never change results, only waste
+    lanes.  Built by :func:`stack_hops`; ``None`` from there means the hop
+    shapes genuinely differ and callers must fall back to unrolled dispatch.
+    """
+
+    fingerprint: str
+    num_hops: int
+    elements_per_hop: int        # padded per-hop element count
+    num_regs: int
+    used: tuple[int, ...]        # union of per-hop used opcodes (+ pad op)
+
+    # (num_hops, elements_per_hop, max_rows) tables.
+    opcode: np.ndarray           # int32
+    dst: np.ndarray              # int32
+    src0: np.ndarray             # int32
+    src1: np.ndarray             # int32
+    imm0: np.ndarray             # uint32
+    imm1: np.ndarray             # uint32
+    mask: np.ndarray             # uint32
+    first_write: np.ndarray      # int32
+
+
+def stack_hops(hops: "list[LoweredProgram]") -> StackedHops | None:
+    """Stack fabric-hop table slices into one scan-compatible plan.
+
+    Returns ``None`` when the hops cannot share one compiled body: different
+    row widths or different register files (never the case for
+    ``slice_elements`` views of one program, always the case for slices of
+    *different* programs).  Differing element counts (the last hop of a
+    partition is short) are fine — short hops are padded with no-op
+    elements.
+    """
+    if not hops:
+        return None
+    head = hops[0]
+    if any(
+        h.max_rows != head.max_rows or h.num_regs != head.num_regs
+        for h in hops
+    ):
+        return None
+    e_pad = max(h.num_elements for h in hops)
+    null = head.null_slot
+    pads = {
+        "opcode": (np.int32, SHR_AND_IMM),
+        "dst": (np.int32, null),
+        "src0": (np.int32, null),
+        "src1": (np.int32, null),
+        "imm0": (np.uint32, 0),
+        "imm1": (np.uint32, 0),
+        "mask": (np.uint32, 0),
+        "first_write": (np.int32, 1),
+    }
+    stacked: dict[str, np.ndarray] = {}
+    for name, (dtype, fill) in pads.items():
+        planes = []
+        for h in hops:
+            a = np.asarray(getattr(h, name), dtype)
+            short = e_pad - a.shape[0]
+            if short:
+                a = np.concatenate(
+                    [a, np.full((short, a.shape[1]), fill, dtype)]
+                )
+            planes.append(a)
+        stacked[name] = np.stack(planes)
+    used: set[int] = {SHR_AND_IMM}  # pad elements/rows always evaluate
+    for h in hops:
+        used.update(h.used_opcodes())
+    return StackedHops(
+        fingerprint="stack(" + "+".join(h.fingerprint() for h in hops) + ")",
+        num_hops=len(hops),
+        elements_per_hop=e_pad,
+        num_regs=head.num_regs,
+        used=tuple(sorted(used)),
+        **stacked,
+    )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StackedPackedLayers:
+    """A :class:`PackedProgram` with every layer padded to common shapes and
+    stacked on a leading layer axis — the packed backend's scan plan.
+
+    Padding is inert by construction: pad neurons carry an all-zero mask and
+    a never-reachable threshold (``0xFFFFFFFF`` agreements, far above the
+    ``32 * n_words`` maximum), so their output bits are always 0; pad input
+    bits scatter a guaranteed-zero bit into word 0 (the carried bit vector
+    is zero beyond every layer's true width).  Built by
+    :func:`stack_packed_layers`.
+    """
+
+    num_layers: int
+    max_bits: int                # carried bit-vector width (>= every n_in/n_out)
+    max_words: int
+    max_out: int
+    input_bits: int
+    output_bits: int
+
+    # (num_layers, ...) stacked layer parameters.
+    weights: np.ndarray          # (L, max_out, max_words) uint32
+    thresholds: np.ndarray       # (L, max_out) uint32
+    mask: np.ndarray             # (L, max_out, max_words) uint32
+    in_word: np.ndarray          # (L, max_bits) int32
+    in_shift: np.ndarray         # (L, max_bits) uint32
+
+
+def stack_packed_layers(pp: PackedProgram) -> StackedPackedLayers:
+    """Pad + stack a packed program's layers for ``lax.scan`` execution."""
+    layers = pp.layers
+    max_out = max(pl.n_out for pl in layers)
+    max_words = max(pl.n_words for pl in layers)
+    max_bits = max(
+        max(pl.n_in for pl in layers), max(pl.n_out for pl in layers)
+    )
+    L = len(layers)
+    weights = np.zeros((L, max_out, max_words), np.uint32)
+    mask = np.zeros((L, max_out, max_words), np.uint32)
+    # Pad neurons never fire: agreement counts are bounded by 32*max_words.
+    thresholds = np.full((L, max_out), FULL, np.uint32)
+    in_word = np.zeros((L, max_bits), np.int32)
+    in_shift = np.zeros((L, max_bits), np.uint32)
+    for li, pl in enumerate(layers):
+        weights[li, : pl.n_out, : pl.n_words] = pl.weights
+        mask[li, : pl.n_out, : pl.n_words] = pl.mask
+        thresholds[li, : pl.n_out] = pl.thresholds
+        in_word[li, : pl.n_in] = pl.in_word
+        in_shift[li, : pl.n_in] = pl.in_shift
+    return StackedPackedLayers(
+        num_layers=L,
+        max_bits=max_bits,
+        max_words=max_words,
+        max_out=max_out,
+        input_bits=pp.input_bits,
+        output_bits=pp.output_bits,
+        weights=weights,
+        thresholds=thresholds,
+        mask=mask,
+        in_word=in_word,
+        in_shift=in_shift,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Liveness + slot renaming
 # ---------------------------------------------------------------------------
 

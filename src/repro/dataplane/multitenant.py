@@ -538,13 +538,23 @@ class SwitchScheduler:
         chunk_size: int | None = None,
         collect: bool = True,
         interpret: bool | None = None,
+        plan=None,
     ) -> SchedulerRunResult:
         """Serve a mixed stream: an iterable of ``(tenant_ids, bits)`` chunks
         (e.g. ``traffic.mixed_tenant_stream``) or one such pair.
 
         Per-tenant outputs (``collect=True``) are bit-exact with each
         tenant's single-program ``executor.execute`` over its served packets.
+        A ``plan`` (:class:`repro.dataplane.plan.ExecutionPlan`) overrides
+        ``backend``/``chunk_size``/``interpret``; ``collect`` and ``mode``
+        stay scheduler-level knobs.
         """
+        if plan is not None:
+            backend = plan.backend_str
+            if plan.chunk_size is not None:
+                chunk_size = plan.chunk_size
+            if plan.interpret is not None:
+                interpret = plan.interpret
         if not self.tenants:
             raise ValueError("no tenants admitted")
         mode = mode or self.resolve_mode()
@@ -662,6 +672,13 @@ class SwitchScheduler:
                         continue
                     st.packets += int(rows.size)
                     st.served += int(rows.size)
+                    # Attribute this chunk's latency by the tenant's actual
+                    # packet share of THIS chunk — bursty streams put a
+                    # tenant in some chunks and not others, so assuming a
+                    # run-uniform mix (the old ``st.seconds = seconds``)
+                    # over/under-charged tenants whose packets cluster in
+                    # fast or slow chunks.
+                    st.seconds += dt * (rows.size / n)
                     if collect:
                         collected[t].append(res[rows, : mp.out_bits[t]])
                     if obs.enabled():
@@ -681,9 +698,6 @@ class SwitchScheduler:
                 n_chunks += 1
 
         for t, st in enumerate(stats):
-            # One fused pass serves everyone: wall time is shared, so every
-            # tenant's rate is its packet share of the common clock.
-            st.seconds = seconds
             if collect:
                 st.outputs = (
                     np.concatenate(collected[t])

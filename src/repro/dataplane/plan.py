@@ -1,0 +1,190 @@
+"""Typed execution plans: one entry point for every dataplane executor.
+
+Before this module, backend selection was stringly typed and scattered —
+``execute(..., backend="jnp")``, ``fabric.run(..., backend="pallas")``,
+``scheduler.run(..., backend="packed")`` — and each entry point grew its own
+keyword surface (chunk sizes, interpret flags, collection switches).
+:class:`ExecutionPlan` gathers the *how* of a run into one frozen value and
+:func:`run` dispatches the *what* (a program, a fabric, a scheduler) with it:
+
+    from repro.dataplane import Backend, ExecutionPlan, run
+
+    result = run(program, stream,
+                 plan=ExecutionPlan(backend=Backend.PACKED, fleet=64))
+
+Dispatch is by program/stream type:
+
+* ``PipelineProgram`` / ``LoweredProgram`` + a 2-D packet array ->
+  ``executor.execute`` (returns the output bits);
+* ... + a chunk iterator -> ``executor.execute_stream`` (returns
+  :class:`~repro.dataplane.executor.StreamResult`);
+* ... + ``plan.fleet`` set -> ``fleet.execute_fleet`` over N stream
+  replicas (returns :class:`~repro.dataplane.fleet.FleetRunResult`);
+* ``SwitchFabric`` -> ``fabric.run`` (hop-scanned when the plan allows);
+* ``SwitchScheduler`` -> ``scheduler.run`` on a mixed tenant stream;
+* ``Backend.INTERPRETER`` -> the legacy per-op reference interpreter
+  (``core.interpreter.run_program``) — the correctness witness, only
+  reachable through :func:`run` (the fused executors never accept it).
+
+The legacy keyword surfaces remain as thin shims: every ``backend=`` string
+the executors accepted still works (``executor.resolve_backend`` coerces
+:class:`Backend` values and their string aliases alike), so existing call
+sites and tests keep passing while new code states its plan once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class Backend(enum.Enum):
+    """Executor backend, replacing the stringly-typed ``backend=`` knob.
+
+    Values are the legacy strings, so ``Backend.FUSED.value`` is a valid
+    argument anywhere a string was accepted (and vice versa through
+    :meth:`coerce`).
+    """
+
+    AUTO = "auto"
+    FUSED = "jnp"          # fused op-table scan (alias: "fused")
+    PALLAS = "pallas"      # kernels.optable_exec (interpret off-TPU)
+    PACKED = "packed"      # bit-packed PHV XNOR+popcount
+    INTERPRETER = "interpreter"  # legacy per-op reference (run() only)
+
+    @classmethod
+    def coerce(cls, value: "Backend | str") -> "Backend":
+        """Accept a :class:`Backend`, its value, or a legacy alias."""
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            alias = _ALIASES.get(value.lower())
+            if alias is not None:
+                return alias
+        raise ValueError(
+            f"unknown backend {value!r}; expected one of "
+            f"{sorted(_ALIASES)} or a Backend member"
+        )
+
+
+_ALIASES: dict[str, Backend] = {
+    **{b.value: b for b in Backend},
+    "fused": Backend.FUSED,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Everything about *how* to run a program, in one frozen value.
+
+    ``backend``     executor backend (:class:`Backend` or legacy string).
+    ``chunk_size``  packets per device dispatch (None -> executor default;
+                    for fleets this is the *per-stream* chunk).
+    ``interpret``   force/disable Pallas interpreter mode (None -> auto:
+                    interpret off-TPU).
+    ``scan_hops``   fabric hop execution: True -> one ``lax.scan`` over
+                    stacked hop tables, False -> unrolled per-hop dispatch,
+                    None -> scan whenever the hops stack (same row/register
+                    shapes; they always do for slices of one program).
+    ``fleet``       batch this many independent streams through one
+                    compiled executor (None -> single-stream paths).
+    ``devices``     shard the fleet's stream axis over this many devices
+                    via ``shard_map`` (None -> 1 when the stream count
+                    does not divide the device count, else all local
+                    devices).
+    ``collect``     keep outputs (streaming paths default to stats-only).
+    """
+
+    backend: Backend | str = Backend.AUTO
+    chunk_size: int | None = None
+    interpret: bool | None = None
+    scan_hops: bool | None = None
+    fleet: int | None = None
+    devices: int | None = None
+    collect: bool = False
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "backend", Backend.coerce(self.backend))
+        if self.chunk_size is not None and self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.fleet is not None and self.fleet < 1:
+            raise ValueError(f"fleet must be >= 1, got {self.fleet}")
+        if self.devices is not None and self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+
+    @property
+    def backend_str(self) -> str:
+        """The legacy string the executor keyword surface expects."""
+        return self.backend.value
+
+
+def run(program, stream, *, plan: ExecutionPlan | None = None):
+    """Execute ``stream`` through ``program`` according to ``plan``.
+
+    See the module docstring for the dispatch table.  ``stream`` may be a
+    ``(batch, input_bits)`` {0,1} array, an iterator of such chunks, a
+    ``(tenant_ids, bits)`` mixed stream (for a scheduler), or a sequence of
+    per-stream chunk iterators (for a fleet plan).
+    """
+    from repro.dataplane import executor as _executor
+    from repro.dataplane import fabric as _fabric
+    from repro.dataplane import fleet as _fleet
+    from repro.dataplane import multitenant as _multitenant
+    from repro.dataplane.lowering import LoweredProgram, lower_program
+
+    plan = plan or ExecutionPlan()
+
+    if isinstance(program, _multitenant.SwitchScheduler):
+        if plan.backend is Backend.INTERPRETER:
+            raise ValueError("the interpreter backend serves single programs")
+        return program.run(
+            stream,
+            backend=plan.backend_str,
+            chunk_size=plan.chunk_size,
+            collect=True,
+            interpret=plan.interpret,
+        )
+
+    if isinstance(program, _fabric.SwitchFabric):
+        if plan.backend is Backend.INTERPRETER:
+            raise ValueError("the interpreter backend has no fabric form")
+        return program.run(stream, plan=plan)
+
+    if plan.backend is Backend.INTERPRETER:
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.core.interpreter import run_program
+
+        if isinstance(program, LoweredProgram):
+            raise ValueError(
+                "the interpreter runs source PipelinePrograms; pass the "
+                "un-lowered program for Backend.INTERPRETER"
+            )
+        return np.asarray(run_program(program, jnp.asarray(stream)))
+
+    lowered = (
+        program
+        if isinstance(program, LoweredProgram)
+        else lower_program(program)
+    )
+
+    if plan.fleet is not None:
+        return _fleet.execute_fleet(lowered, stream, plan=plan)
+
+    if hasattr(stream, "ndim") and getattr(stream, "ndim", 0) == 2:
+        return _executor.execute(
+            lowered,
+            stream,
+            backend=plan.backend_str,
+            chunk_size=plan.chunk_size,
+            interpret=plan.interpret,
+        )
+
+    return _executor.execute_stream(
+        lowered,
+        stream,
+        backend=plan.backend_str,
+        chunk_size=plan.chunk_size or _executor.DEFAULT_CHUNK,
+        collect=plan.collect,
+        interpret=plan.interpret,
+    )

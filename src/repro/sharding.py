@@ -216,3 +216,47 @@ def to_named(tree: Any, mesh: Mesh) -> Any:
 def activation_spec(mesh: Mesh, batch: int) -> P:
     """(B, S, d) activations: batch over (pod, data)."""
     return P(_dp_if_divisible(mesh, batch), None, None)
+
+
+# ---------------------------------------------------------------------------
+# Fleet sharding (dataplane): streams over a 1-D device mesh
+# ---------------------------------------------------------------------------
+
+# jax >= 0.6 promotes shard_map to jax.shard_map (check_vma=); older releases
+# ship it as jax.experimental.shard_map.shard_map (check_rep=).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_NO_CHECK = {"check_vma": False}
+else:  # pragma: no cover - exercised on older jax only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_NO_CHECK = {"check_rep": False}
+
+
+def fleet_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """1-D device mesh over a ``fleet`` axis for batched stream serving.
+
+    The dataplane's fleet executor (``repro.dataplane.fleet``) vmaps one
+    compiled program over the leading stream axis of ``(streams, chunk,
+    bits)`` blocks; this mesh is what ``shard_streams`` splits that axis
+    over, one group of simulated switches per device.  Defaults to every
+    local device.
+    """
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else num_devices
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"need 1..{len(devices)} local devices, got {num_devices}"
+        )
+    return Mesh(np.asarray(devices[:n]), ("fleet",))
+
+
+def shard_streams(fn, mesh: Mesh):
+    """Wrap a ``(streams, ...) -> (streams, ...)`` batched function in
+    ``shard_map`` over the ``fleet`` axis: each device independently runs
+    ``fn`` on its local slice of streams (no collectives — streams never
+    communicate, exactly like the independent switches they simulate)."""
+    spec = P("fleet")
+    return _shard_map(
+        fn, mesh=mesh, in_specs=(spec,), out_specs=spec, **_SHARD_MAP_NO_CHECK
+    )

@@ -45,6 +45,7 @@ __all__ = [
     "artifact_on_failure",
     "build_case",
     "chip_specs",
+    "fleet_plans",
     "given",
     "packets_for",
     "program_cases",
@@ -191,6 +192,25 @@ def stream_plans(max_packets: int = 300, max_chunk: int = 64):
         lambda n: st.integers(min_value=1, max_value=max_chunk).flatmap(
             lambda c: st.integers(min_value=0, max_value=_SEED_MAX).map(
                 lambda seed: (n, c, seed)
+            )
+        )
+    )
+
+
+def fleet_plans(
+    max_streams: int = 16, max_packets: int = 120, max_chunk: int = 48
+):
+    """``(stream_lengths, chunk_size, packet_seed)`` fleet shapes: 1..16
+    independent streams with *different* per-stream lengths (so fleet blocks
+    zero-pad exhausted streams mid-run) and a shared per-stream chunk that
+    divides, straddles, or exceeds the lengths."""
+    lengths = st.integers(min_value=1, max_value=max_packets)
+    return st.integers(min_value=1, max_value=max_streams).flatmap(
+        lambda s: st.lists(lengths, min_size=s, max_size=s).flatmap(
+            lambda ls: st.integers(min_value=1, max_value=max_chunk).flatmap(
+                lambda c: st.integers(min_value=0, max_value=_SEED_MAX).map(
+                    lambda seed: (tuple(ls), c, seed)
+                )
             )
         )
     )

@@ -1,0 +1,372 @@
+"""Fleet serving + typed-plan API: vmapped streams, scanned hops, factory.
+
+The fleet claim is purely structural — every executor backend maps packet
+rows independently, so batching N streams through one vmapped dispatch (or
+scanning a hop chain as one ``lax.scan``) can only reorder *dispatches*,
+never bits.  The fuzz properties here hold that claim against random fleet
+shapes (1..16 streams, mixed lengths, mid-stream resume) and random hop
+counts on every backend; the deterministic tests pin the new surfaces —
+:class:`ExecutionPlan`/:func:`run`, :func:`build_fleet`, ``FleetEngine`` —
+to the executors they wrap.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from strategies import (
+    HEAVY_EXAMPLES,
+    ProgramCase,
+    artifact_on_failure,
+    build_case,
+    fleet_plans,
+    given,
+    packets_for,
+    program_cases,
+    settings,
+    st,
+)
+
+from repro.core import bnn
+from repro.core.pipeline import ChipSpec
+from repro.dataplane import executor
+from repro.dataplane.fabric import SwitchFabric
+from repro.dataplane.factory import FleetSpec, TenantSpec, build_fleet
+from repro.dataplane.fleet import execute_fleet, fleet_blocks
+from repro.dataplane.plan import Backend, ExecutionPlan, run
+from repro.serving.engine import FleetEngine
+
+BACKENDS = ("jnp", "pallas", "packed")
+
+
+def _oracle(built, packets: np.ndarray) -> np.ndarray:
+    return np.asarray(
+        bnn.forward(
+            [np.asarray(w) for w in built.params],
+            packets,
+            thresholds=built.thresholds,
+        )
+    )
+
+
+def _streams_for(case: ProgramCase, lengths, seed: int) -> list[np.ndarray]:
+    return [
+        packets_for(case, seed=seed + 7 * i, n=n)
+        for i, n in enumerate(lengths)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Fuzz: fleet == per-stream == oracle, including mid-stream resume
+# ---------------------------------------------------------------------------
+
+@given(program_cases(max_layers=2, max_width=24), fleet_plans())
+@settings(max_examples=HEAVY_EXAMPLES)
+def test_fuzz_fleet_matches_per_stream_and_resume(case: ProgramCase, plan):
+    """Random fleet shapes on every backend: the vmapped fleet's per-stream
+    outputs equal running each stream alone, equal the oracle, and survive
+    a mid-stream stop/resume split bit-for-bit."""
+    lengths, chunk, seed = plan
+    with artifact_on_failure(
+        "fuzz_fleet_matches_per_stream_and_resume", (case, plan)
+    ):
+        built = build_case(case)
+        streams = _streams_for(case, lengths, seed)
+        singles = [
+            executor.execute(built.lowered, s, backend="packed")
+            for s in streams
+        ]
+        for s, single in zip(streams, singles):
+            np.testing.assert_array_equal(single, _oracle(built, s))
+        for backend in BACKENDS:
+            eplan = ExecutionPlan(
+                backend=backend, chunk_size=chunk, collect=True
+            )
+            fr = execute_fleet(built.lowered, streams, plan=eplan)
+            assert fr.streams == len(streams)
+            assert fr.packets == sum(lengths)
+            np.testing.assert_array_equal(
+                fr.per_stream_packets, np.asarray(lengths)
+            )
+            for i, single in enumerate(singles):
+                np.testing.assert_array_equal(
+                    fr.outputs[i],
+                    single,
+                    err_msg=f"backend {backend!r} stream {i} diverges",
+                )
+            # Mid-stream resume: stop every stream at an uneven cut, run the
+            # fleet twice, concatenate per stream — nothing may change.  A
+            # stream whose cut swallows it entirely resumes as the empty
+            # stream (zero blocks), which the block zipper must tolerate.
+            cuts = [max(1, n // 3) for n in lengths]
+            first = execute_fleet(
+                built.lowered,
+                [s[:c] for s, c in zip(streams, cuts)],
+                plan=eplan,
+            )
+            second = execute_fleet(
+                built.lowered,
+                [s[c:] for s, c in zip(streams, cuts)],
+                plan=eplan,
+            )
+            for i, single in enumerate(singles):
+                resumed = np.concatenate(
+                    [first.outputs[i], second.outputs[i]]
+                ).astype(np.int32)
+                np.testing.assert_array_equal(
+                    resumed,
+                    single,
+                    err_msg=f"backend {backend!r} stream {i} resume diverges",
+                )
+
+
+# ---------------------------------------------------------------------------
+# Fuzz: scanned hop chains == unrolled == single switch == oracle
+# ---------------------------------------------------------------------------
+
+@given(
+    program_cases(max_layers=2, max_width=24),
+    st.integers(min_value=2, max_value=6),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=HEAVY_EXAMPLES)
+def test_fuzz_scanned_hops_bit_exact(case: ProgramCase, hops, seed):
+    """Random hop counts: the hop chain as one ``lax.scan`` over stacked
+    tables == the unrolled per-hop loop == the single-switch executor, with
+    the per-hop telemetry contract intact."""
+    with artifact_on_failure(
+        "fuzz_scanned_hops_bit_exact", (case, hops, seed)
+    ):
+        built = build_case(case)
+        per_hop = -(-built.lowered.num_elements // hops)  # ceil
+        chip = ChipSpec(
+            num_elements=per_hop,
+            phv_bits=built.program.chip.phv_bits,
+            name=f"fuzz-{hops}hop",
+        )
+        fab = SwitchFabric.partition(
+            built.program, mode="multi_hop", chip=chip
+        )
+        packets = packets_for(case, seed=seed, n=48)
+        want = executor.execute(built.lowered, packets, backend="jnp")
+        np.testing.assert_array_equal(want, _oracle(built, packets))
+        for backend in BACKENDS:
+            scanned = fab.run(packets, backend=backend, scan_hops=True)
+            np.testing.assert_array_equal(
+                scanned.outputs,
+                want,
+                err_msg=f"backend {backend!r} scanned fabric diverges",
+            )
+            assert scanned.scanned
+            assert len(scanned.hop_seconds) == fab.num_hops
+        unrolled = fab.run(packets, backend="jnp", scan_hops=False)
+        np.testing.assert_array_equal(unrolled.outputs, want)
+        assert not unrolled.scanned
+
+
+# ---------------------------------------------------------------------------
+# Deterministic: the block zipper and fleet edge shapes
+# ---------------------------------------------------------------------------
+
+def _built_small():
+    return build_case(ProgramCase((16, 24, 8), 3, "per_neuron", 5))
+
+
+def test_fleet_blocks_pad_and_valid_counts():
+    """Mixed-length streams zip into fixed-shape blocks whose valid counts
+    recover exactly the real rows; pad rows are zeros."""
+    rng = np.random.default_rng(0)
+    streams = [
+        rng.integers(0, 2, (n, 16)).astype(np.int32) for n in (10, 3, 0, 7)
+    ]
+    blocks = list(fleet_blocks([[s] for s in streams], 4, 16))
+    assert len(blocks) == 3  # ceil(10 / 4)
+    totals = np.zeros(4, np.int64)
+    for b, valid in blocks:
+        assert b.shape == (4, 4, 16)
+        for i in range(4):
+            v = int(valid[i])
+            np.testing.assert_array_equal(b[i, v:], 0)
+            totals[i] += v
+    np.testing.assert_array_equal(totals, [10, 3, 0, 7])
+
+
+def test_fleet_empty_stream_yields_empty_outputs():
+    built = _built_small()
+    streams = [packets_for(built.case, seed=1, n=9), np.zeros((0, 16), np.int32)]
+    fr = execute_fleet(
+        built.lowered, streams, plan=ExecutionPlan(collect=True)
+    )
+    assert fr.outputs[1].shape == (0, built.lowered.output_bits)
+    np.testing.assert_array_equal(
+        fr.outputs[0], executor.execute(built.lowered, streams[0])
+    )
+
+
+def test_fleet_replicates_single_array_and_sharded_path():
+    """A lone (n, bits) array + plan.fleet replicates it per switch; the
+    shard_map path (devices=1 on CPU) stays bit-exact."""
+    built = _built_small()
+    x = packets_for(built.case, seed=2, n=33)
+    want = executor.execute(built.lowered, x, backend="packed")
+    for devices in (None, 1):
+        fr = execute_fleet(
+            built.lowered,
+            x,
+            plan=ExecutionPlan(
+                backend=Backend.PACKED,
+                fleet=4,
+                devices=devices,
+                chunk_size=8,
+                collect=True,
+            ),
+        )
+        assert fr.streams == 4 and fr.packets == 4 * 33
+        for i in range(4):
+            np.testing.assert_array_equal(fr.outputs[i], want)
+    with pytest.raises(ValueError, match="shard evenly"):
+        execute_fleet(
+            built.lowered,
+            [x, x, x],
+            plan=ExecutionPlan(fleet=3, devices=2),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic: the typed plan API
+# ---------------------------------------------------------------------------
+
+def test_backend_coerce_aliases():
+    assert Backend.coerce("jnp") is Backend.FUSED
+    assert Backend.coerce("fused") is Backend.FUSED
+    assert Backend.coerce(Backend.PACKED) is Backend.PACKED
+    assert ExecutionPlan(backend="packed").backend is Backend.PACKED
+    with pytest.raises(ValueError, match="unknown backend"):
+        Backend.coerce("cuda")
+    with pytest.raises(ValueError):
+        ExecutionPlan(fleet=0)
+
+
+def test_run_dispatches_every_program_kind():
+    """One entry point: array, chunk stream, fleet, fabric, and the
+    interpreter witness all agree through run()."""
+    built = _built_small()
+    x = packets_for(built.case, seed=4, n=40)
+    want = _oracle(built, x)
+
+    out = run(built.lowered, x, plan=ExecutionPlan(backend=Backend.PACKED))
+    np.testing.assert_array_equal(out, want)
+
+    sres = run(
+        built.program,
+        iter([x[:25], x[25:]]),
+        plan=ExecutionPlan(backend="jnp", chunk_size=16, collect=True),
+    )
+    np.testing.assert_array_equal(sres.outputs, want)
+
+    fres = run(
+        built.lowered, x, plan=ExecutionPlan(fleet=3, chunk_size=8,
+                                             collect=True)
+    )
+    for i in range(3):
+        np.testing.assert_array_equal(fres.outputs[i], want)
+
+    interp = run(
+        built.program, x, plan=ExecutionPlan(backend=Backend.INTERPRETER)
+    )
+    np.testing.assert_array_equal(interp, want)
+    with pytest.raises(ValueError, match="un-lowered"):
+        run(built.lowered, x,
+            plan=ExecutionPlan(backend=Backend.INTERPRETER))
+
+    chip = ChipSpec(
+        num_elements=max(1, built.lowered.num_elements // 3),
+        phv_bits=built.program.chip.phv_bits,
+        name="t/3hop",
+    )
+    fab = SwitchFabric.partition(built.program, chip=chip)
+    fres = run(fab, x, plan=ExecutionPlan(backend="jnp"))
+    np.testing.assert_array_equal(fres.outputs, want)
+    assert fres.scanned
+
+
+def test_fabric_packed_requires_scan():
+    built = _built_small()
+    chip = ChipSpec(
+        num_elements=max(1, built.lowered.num_elements // 2),
+        phv_bits=built.program.chip.phv_bits,
+        name="t/2hop",
+    )
+    fab = SwitchFabric.partition(built.program, chip=chip)
+    with pytest.raises(ValueError, match="packed"):
+        fab.run(
+            packets_for(built.case, seed=5, n=8),
+            backend="packed",
+            scan_hops=False,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic: the declarative factory
+# ---------------------------------------------------------------------------
+
+_TENANTS = (
+    TenantSpec("a", scenario="ddos_burst", shape=(16, 24, 8), weight=2.0),
+    TenantSpec("b", scenario="iot_telemetry", shape=(8, 12, 4), seed=1),
+)
+
+
+def test_build_fleet_wires_scheduler_stream_and_fabric():
+    fleet = build_fleet(FleetSpec(tenants=_TENANTS))
+    assert fleet.num_tenants == 2
+    assert fleet.chip.num_elements == (
+        sum(p.num_elements for p in fleet.programs) + 1
+    )
+    sched = fleet.scheduler(mode="merged")
+    assert [t.name for t in sched.tenants] == ["a", "b"]
+    res = sched.run(
+        fleet.stream(600, chunk_size=128, seed=3), chunk_size=128,
+        collect=True,
+    )
+    assert res.packets == 600
+    # Per-tenant outputs equal the tenant's own compiled program run alone.
+    for tid, prog in enumerate(fleet.programs):
+        outs = res.outputs_for(tid)
+        assert outs.shape[1] == prog.output_bits
+    fab = fleet.fabric(0, hops=3)
+    assert fab.num_hops == 3
+
+
+def test_build_fleet_accepts_dict_and_rejects_bad_specs():
+    fleet = build_fleet(
+        {
+            "tenants": [
+                {"name": "x", "scenario": "ddos_burst", "shape": (8, 4)},
+            ],
+            "mode": "time_sliced",
+        }
+    )
+    assert fleet.spec.mode == "time_sliced"
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetSpec(tenants=(_TENANTS[0], _TENANTS[0]))
+    with pytest.raises(ValueError, match="exactly one"):
+        TenantSpec("y", scenario="ddos_burst")
+
+
+# ---------------------------------------------------------------------------
+# Deterministic: the async serving pipeline
+# ---------------------------------------------------------------------------
+
+def test_fleet_engine_bit_exact_with_execute_fleet():
+    built = _built_small()
+    x = packets_for(built.case, seed=8, n=130)
+    streams = [x, x[:77], x[17:]]
+    plan = ExecutionPlan(backend="packed", chunk_size=32, collect=True)
+    want = execute_fleet(built.lowered, streams, plan=plan)
+    eng = FleetEngine(built.lowered, plan=plan)
+    got = eng.serve(streams, collect=True)
+    assert got.packets == want.packets
+    assert got.chunks == want.chunks
+    for a, b in zip(got.outputs, want.outputs):
+        np.testing.assert_array_equal(a, b)
+    assert got.wall_seconds > 0 and got.ingest_seconds >= 0

@@ -11,7 +11,11 @@ Tracked metrics (chosen to be meaningful at CI smoke budgets):
 * every ``pps`` / ``steps_per_s`` value in a row's derived column
   (higher is better) — executor, fabric, scheduler, and trainer rates;
 * ``bnn_export``'s ``us_per_call`` (lower is better) — end-to-end export
-  latency, the control-plane cost of pushing a model to the switch.
+  latency, the control-plane cost of pushing a model to the switch;
+* for rows that also carry a ``streams=`` count (the fleet benchmarks), a
+  derived ``pps_per_stream`` (higher is better) — aggregate rate divided by
+  fleet size, so a regression that only shows up per-switch is visible even
+  when the aggregate still clears the threshold.
 
 The baseline records the budget env (``DATAPLANE_BENCH_PACKETS`` etc.) it
 was generated under; CI must run the benchmarks with the same budgets or
@@ -42,6 +46,7 @@ BUDGET_ENV = (
     "MULTITENANT_BENCH_TENANTS",
     "MULTITENANT_BENCH_PACKETS",
     "PCAP_BENCH_PACKETS",
+    "FLEET_BENCH_STREAMS",
 )
 
 
@@ -65,6 +70,19 @@ def collect_metrics(bench_dir: str) -> dict[str, dict]:
                         "value": val,
                         "higher_is_better": True,
                     }
+            pps = row["metrics"].get("pps")
+            streams = row["metrics"].get("streams")
+            if (
+                pps is not None
+                and streams is not None
+                and math.isfinite(pps)
+                and pps > 0
+                and streams > 0
+            ):
+                metrics[f"{row['name']}.pps_per_stream"] = {
+                    "value": pps / streams,
+                    "higher_is_better": True,
+                }
             if row["name"] in LATENCY_ROWS and math.isfinite(
                 row["us_per_call"]
             ):
