@@ -27,6 +27,7 @@ from repro.core import bnn, compile_bnn, throughput
 from repro.core.interpreter import run_program
 from repro.dataplane import execute_stream, lower_program, traffic
 from repro.dataplane.executor import DEFAULT_CHUNK
+from repro.roofline import dataplane as roofline_dp
 
 
 def rows() -> list[tuple[str, float, str]]:
@@ -87,6 +88,25 @@ def rows() -> list[tuple[str, float, str]]:
                 f"warmup_us={1e6 * sr.warmup_seconds:.0f}",
             )
         )
+
+    # Roofline-anchored utilization: cost the exact compiled packed dispatch
+    # at this chunk size and judge the best measured packed rate against the
+    # TPU v5e memory-roofline packets/s ceiling (repro/roofline/dataplane).
+    # The CI gate tracks the fraction as ``dataplane_packed_roofline_frac``.
+    t0 = time.perf_counter()
+    rf = roofline_dp.probe_stream(lp, backend="packed", chunk=chunk)
+    probe_us = 1e6 * (time.perf_counter() - t0)
+    best_packed = max(packed_pps.values())
+    out.append(
+        (
+            "dataplane_packed",
+            probe_us,
+            f"roofline_frac={rf.fraction(best_packed):.4e} "
+            f"roofline_pps={rf.roofline_pps:.3e} "
+            f"bytes_per_packet={rf.bytes_per_packet:.1f} "
+            f"measured_pps={best_packed:.3e} bottleneck={rf.bottleneck}",
+        )
+    )
 
     # Legacy per-op interpreter: one chunk, same size, eager dispatch.
     x = jnp.asarray(traffic.generate("uniform_random", chunk, 32, seed=0))

@@ -662,6 +662,33 @@ def _rechunk(chunks: Iterable[np.ndarray], chunk_size: int) -> Iterator[np.ndarr
         yield np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
 
 
+def _probe_roofline(lowered, backend, chunk, interpret, scan_hops):
+    """Fail-soft ``roofline.dataplane`` probe of the compiled dispatch —
+    obs-only bookkeeping, never allowed to affect an execution path."""
+    try:
+        from repro.roofline import dataplane as _roofline_dp
+
+        return _roofline_dp.probe_stream(
+            lowered,
+            backend=backend,
+            chunk=chunk,
+            interpret=interpret,
+            scan_hops=scan_hops,
+        )
+    except Exception:  # noqa: BLE001 - observation must not break runs
+        return None
+
+
+def _record_roofline(roofline, measured_pps):
+    """Fail-soft gauge publication for a probe (see ``_probe_roofline``)."""
+    try:
+        from repro.roofline import dataplane as _roofline_dp
+
+        _roofline_dp.record(roofline, measured_pps=measured_pps)
+    except Exception:  # noqa: BLE001 - observation must not break runs
+        pass
+
+
 def execute_stream(
     lowered: LoweredProgram,
     chunks: Iterable[np.ndarray],
@@ -687,6 +714,7 @@ def execute_stream(
     n_chunks = 0
     seconds = 0.0
     warmup = 0.0
+    roofline = None
     with obs.span(
         "stream:execute_stream", cat="stream",
         backend=backend, chunk_size=chunk_size,
@@ -707,6 +735,10 @@ def execute_stream(
                         lowered, dev, backend, interpret, scan_hops
                     ).block_until_ready()
                     warmup = time.perf_counter() - w0
+                if obs.enabled():  # cost the compiled dispatch, once
+                    roofline = _probe_roofline(
+                        lowered, backend, chunk_size, interpret, scan_hops
+                    )
             with obs.span("execute:stream_chunk", cat="execute", packets=n):
                 t0 = time.perf_counter()
                 res = np.asarray(
@@ -727,6 +759,8 @@ def execute_stream(
                 m.histogram("dataplane.chunk_seconds").observe(dt)
     if obs.enabled() and seconds > 0:
         obs.registry().gauge("dataplane.stream_pps").set(total / seconds)
+        if roofline is not None:
+            _record_roofline(roofline, total / seconds)
     return StreamResult(
         packets=total,
         chunks=n_chunks,

@@ -201,6 +201,25 @@ def _normalize_streams(streams, fleet: int | None) -> list:
     ]
 
 
+def _probe_fleet_roofline(lowered, backend, n_streams, chunk, plan):
+    """Fail-soft roofline probe of the vmapped fleet dispatch — obs-only
+    bookkeeping, never allowed to affect an execution path."""
+    try:
+        from repro.roofline import dataplane as _roofline_dp
+
+        return _roofline_dp.probe_fleet(
+            lowered,
+            backend=backend,
+            streams=n_streams,
+            chunk=chunk,
+            interpret=plan.interpret,
+            scan_hops=bool(plan.scan_hops),
+            devices=plan.devices,
+        )
+    except Exception:  # noqa: BLE001 - observation must not break runs
+        return None
+
+
 def execute_fleet(
     lowered,
     streams,
@@ -242,6 +261,7 @@ def execute_fleet(
     seconds = 0.0
     warmup = 0.0
     n_blocks = 0
+    roofline = None
     with obs.span(
         "stream:fleet_run", cat="stream",
         streams=n_streams, backend=backend, chunk_size=chunk,
@@ -257,6 +277,10 @@ def execute_fleet(
                     w0 = time.perf_counter()
                     fn(dev).block_until_ready()
                     warmup = time.perf_counter() - w0
+                if obs.enabled():  # cost the compiled dispatch, once
+                    roofline = _probe_fleet_roofline(
+                        lowered, backend, n_streams, chunk, plan
+                    )
             served = int(valid.sum())
             with obs.span(
                 "execute:fleet_chunk", cat="execute", packets=served
@@ -283,6 +307,8 @@ def execute_fleet(
     total = int(per_stream.sum())
     if obs.enabled() and seconds > 0:
         obs.registry().gauge("fleet.agg_pps").set(total / seconds)
+        if roofline is not None:
+            _executor._record_roofline(roofline, total / seconds)
     outputs = None
     if collected is not None:
         outputs = [

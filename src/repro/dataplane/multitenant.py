@@ -63,6 +63,7 @@ from repro.dataplane.lowering import (
     PackedProgram,
     lower_program,
 )
+from repro.obs.slo import SloSpec, SloTracker
 
 SCHEDULER_MODES = ("auto", "merged", "time_sliced")
 DEFAULT_QUANTUM = 4096
@@ -415,6 +416,7 @@ class SwitchScheduler:
         mode: str = "auto",
         quantum: int = DEFAULT_QUANTUM,
         max_queue: int | None = None,
+        clock=None,
     ):
         if mode not in SCHEDULER_MODES:
             raise ValueError(
@@ -431,6 +433,12 @@ class SwitchScheduler:
         self.tenants: list[Tenant] = []
         self._merged: MergedProgram | None = None
         self._last_run: SchedulerRunResult | None = None
+        # SLO tracking (repro.obs.slo): per-tenant-name trackers fed from the
+        # run paths with timestamps from ``clock`` (default perf_counter —
+        # inject a deterministic clock to make burn rates reproducible).
+        self._clock = clock or time.perf_counter
+        self._slo_trackers: dict[str, SloTracker] = {}
+        self._slo_last_now: float = 0.0
 
     # -- admission -----------------------------------------------------------
 
@@ -495,6 +503,32 @@ class SwitchScheduler:
         self.tenants.append(tenant)
         self._merged = None  # table layout changed
         return tenant
+
+    def set_slo(self, spec: SloSpec) -> SloTracker:
+        """Attach (or replace) an SLO for the tenant named ``spec.tenant``.
+
+        May be called before or after the tenant is admitted; the tracker
+        starts collecting from the next run.  Burn rates and breach events
+        surface through :meth:`telemetry` (``TenantTelemetry.slo`` /
+        ``.breach_events``).
+        """
+        tracker = SloTracker(spec)
+        self._slo_trackers[spec.tenant] = tracker
+        return tracker
+
+    def slo_tracker(self, tenant_name: str) -> SloTracker | None:
+        """The live tracker for one tenant name (``None`` if no SLO set)."""
+        return self._slo_trackers.get(tenant_name)
+
+    def _slo_update_all(self) -> None:
+        """End-of-run SLO evaluation: one deterministic update per tracker
+        at a shared timestamp (breach events fire on ok -> breach here)."""
+        if not self._slo_trackers:
+            return
+        now = self._clock()
+        self._slo_last_now = now
+        for tracker in self._slo_trackers.values():
+            tracker.update(now)
 
     # -- mode / merged table -------------------------------------------------
 
@@ -581,6 +615,7 @@ class SwitchScheduler:
                 stream, stats, backend, collect, interpret
             )
         self._last_run = result
+        self._slo_update_all()
         return result
 
     def _check_chunk(self, tids: np.ndarray, bits: np.ndarray, width: int):
@@ -666,12 +701,21 @@ class SwitchScheduler:
                     dt = time.perf_counter() - t0
                 seconds += dt
                 res, tids = res[:n], tids[:n]
+                slo_now = (
+                    self._clock() if self._slo_trackers else 0.0
+                )
                 for t, st in enumerate(stats):
                     rows = np.nonzero(tids == t)[0]
                     if not rows.size:
                         continue
                     st.packets += int(rows.size)
                     st.served += int(rows.size)
+                    tracker = self._slo_trackers.get(self.tenants[t].name)
+                    if tracker is not None:
+                        tracker.observe_packets(slo_now, int(rows.size))
+                        tracker.observe_queue_delay(
+                            slo_now, dt, int(rows.size)
+                        )
                     # Attribute this chunk's latency by the tenant's actual
                     # packet share of THIS chunk — bursty streams put a
                     # tenant in some chunks and not others, so assuming a
@@ -727,9 +771,13 @@ class SwitchScheduler:
         n_chunks = 0
         observing = obs.enabled()
         # Per-packet enqueue timestamps (same chunking as ``queues``), kept
-        # only while observing: serve time minus arrival time is the real
-        # wall-clock queueing delay each packet experienced in the simulator
-        # — the per-tenant p99 the SLO control-plane work keys on.
+        # while observing or while any tenant carries an SLO: serve time
+        # minus arrival time is the real queueing delay each packet
+        # experienced in the simulator — the per-tenant p99 both the
+        # ``mt.queue_delay_seconds`` histograms and the SLO burn rates key
+        # on.  Timestamps come from the scheduler clock so an injected
+        # deterministic clock reproduces them.
+        track = observing or bool(self._slo_trackers)
         arrivals: list[list[np.ndarray]] = [[] for _ in self.tenants]
 
         def serve_turn(t: int) -> None:
@@ -745,7 +793,7 @@ class SwitchScheduler:
             batch = np.concatenate(queues[t])[:queued[t]]
             head, tail = batch[:take], batch[take:]
             queues[t] = [tail] if tail.size else []
-            if observing:
+            if track:
                 times = np.concatenate(arrivals[t])[:queued[t]]
                 head_times, tail_times = times[:take], times[take:]
                 arrivals[t] = [tail_times] if tail_times.size else []
@@ -780,17 +828,29 @@ class SwitchScheduler:
             st.slices += 1
             if collect:
                 collected[t].append(res[:take])
-            if observing:
-                m = obs.registry()
-                m.counter("mt.served_total", tenant=tenant.name).inc(take)
-                m.counter("mt.slices_total", tenant=tenant.name).inc()
-                if deferred_now:
-                    m.counter(
-                        "mt.deferred_total", tenant=tenant.name
-                    ).inc(deferred_now)
-                m.histogram(
-                    "mt.queue_delay_seconds", tenant=tenant.name
-                ).observe_array(np.maximum(t1 - head_times, 0.0))
+            if track:
+                slo_t = self._clock()
+                delays = np.maximum(slo_t - head_times, 0.0)
+                if observing:
+                    m = obs.registry()
+                    m.counter("mt.served_total", tenant=tenant.name).inc(take)
+                    m.counter("mt.slices_total", tenant=tenant.name).inc()
+                    if deferred_now:
+                        m.counter(
+                            "mt.deferred_total", tenant=tenant.name
+                        ).inc(deferred_now)
+                    m.histogram(
+                        "mt.queue_delay_seconds", tenant=tenant.name
+                    ).observe_array(delays)
+                tracker = self._slo_trackers.get(tenant.name)
+                if tracker is not None:
+                    tracker.observe_packets(slo_t, take)
+                    # Arrival chunks share timestamps, so the delay array
+                    # collapses to a few distinct values — feed those as
+                    # weighted observations instead of a per-packet loop.
+                    vals, cnts = np.unique(delays, return_counts=True)
+                    for v, c in zip(vals.tolist(), cnts.tolist()):
+                        tracker.observe_queue_delay(slo_t, float(v), int(c))
 
         with obs.span(
             "stream:mt_time_sliced", cat="stream",
@@ -807,7 +867,7 @@ class SwitchScheduler:
                         f"tenant needs {width}b"
                     )
                 n_chunks += 1
-                now = time.perf_counter() if observing else 0.0
+                now = self._clock() if track else 0.0
                 for t, tenant in enumerate(self.tenants):
                     rows = np.nonzero(tids == t)[0]
                     if not rows.size:
@@ -825,7 +885,7 @@ class SwitchScheduler:
                     if arrived.shape[0]:
                         queues[t].append(arrived)
                         queued[t] += int(arrived.shape[0])
-                        if observing:
+                        if track:
                             arrivals[t].append(
                                 np.full(arrived.shape[0], now, np.float64)
                             )
@@ -914,6 +974,7 @@ class SwitchScheduler:
             else:
                 window = (0, tenant.lowered.num_slots)
                 el_range = None
+            tracker = self._slo_trackers.get(tenant.name)
             rows.append(
                 _telemetry.TenantTelemetry(
                     tid=tenant.tid,
@@ -935,6 +996,14 @@ class SwitchScheduler:
                     deferred=st.deferred if st else 0,
                     slices=st.slices if st else 0,
                     measured_pps=st.packets_per_second if st else None,
+                    slo=(
+                        tracker.status(self._slo_last_now)
+                        if tracker is not None else None
+                    ),
+                    breach_events=(
+                        tuple(tracker.events)
+                        if tracker is not None else ()
+                    ),
                 )
             )
         elements, phv = self._merged_footprint()

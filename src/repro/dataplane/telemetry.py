@@ -35,6 +35,7 @@ import math
 from repro.core import throughput
 from repro.core.pipeline import ChipSpec, PipelineProgram
 from repro.dataplane.lowering import _liveness
+from repro.obs.slo import BreachEvent, SloStatus
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,6 +193,14 @@ class TenantTelemetry:
     deferred: int = 0
     slices: int = 0                    # scheduling turns (time-sliced mode)
     measured_pps: float | None = None
+    # SLO posture (repro.obs.slo), set when the scheduler has an SLO for
+    # this tenant: windowed burn rates plus the deterministic breach log.
+    slo: SloStatus | None = None
+    breach_events: tuple[BreachEvent, ...] = ()
+
+    @property
+    def slo_breached(self) -> bool:
+        return self.slo is not None and self.slo.breached
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +227,11 @@ class MultiTenantTelemetry:
     @property
     def total_deferred(self) -> int:
         return sum(t.deferred for t in self.tenants)
+
+    @property
+    def breached_tenants(self) -> tuple[str, ...]:
+        """Names of tenants currently burning budget faster than allowed."""
+        return tuple(t.name for t in self.tenants if t.slo_breached)
 
     def tenant(self, key: int | str) -> TenantTelemetry:
         """Look up one tenant's telemetry by tid or by name.
@@ -263,6 +277,27 @@ class MultiTenantTelemetry:
                 f" {t.packets:>7}  {t.dropped:>4}  {t.deferred:>5} "
                 f" {t.slices:>6}  {m:>14}"
             )
+        with_slo = [t for t in self.tenants if t.slo is not None]
+        if with_slo:
+            lines.append(
+                "  slo: tenant           state     delay-burn   pps-burn"
+                "   breaches"
+            )
+            for t in with_slo:
+                s = t.slo
+                db = (
+                    f"{s.delay_burn_rate:.2f}x"
+                    if s.delay_burn_rate is not None else "-"
+                )
+                pb = (
+                    f"{s.pps_burn_rate:.2f}x"
+                    if s.pps_burn_rate is not None else "-"
+                )
+                state = "BREACHED" if s.breached else "ok"
+                lines.append(
+                    f"       {t.name:<16} {state:<9} {db:>10} {pb:>10} "
+                    f" {len(t.breach_events):>8}"
+                )
         return "\n".join(lines)
 
 

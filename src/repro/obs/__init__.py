@@ -1,6 +1,9 @@
 """``repro.obs`` — runtime observability for the dataplane hot path.
 
-One global switch, three capabilities:
+One global switch, plus two always-on live-view layers (``obs.windows``
+sliding windows and ``obs.slo`` SLO burn-rate tracking — explicit-
+timestamp, deterministic, owned by whoever instantiates them rather than
+the global registry), and three switched capabilities:
 
 * a **metrics registry** (``obs.metrics``): counters, gauges, and
   streaming histograms with p50/p95/p99 — packets/s, chunk latency,
@@ -48,16 +51,24 @@ import os
 
 from repro.obs import export as _export
 from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.slo import BreachEvent, SloSpec, SloStatus, SloTracker
 from repro.obs.tracing import Span, SpanRecord, Tracer
+from repro.obs.windows import WindowedHistogram, WindowedRate
 
 __all__ = [
+    "BreachEvent",
     "Counter",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "SloSpec",
+    "SloStatus",
+    "SloTracker",
     "Span",
     "SpanRecord",
     "Tracer",
+    "WindowedHistogram",
+    "WindowedRate",
     "disable",
     "enable",
     "enable_from_env",

@@ -46,11 +46,24 @@ def write_metrics_jsonl(path: str, registry: MetricsRegistry) -> str:
     return path
 
 
+def _prom_escape(value: str) -> str:
+    """Escape a label value per the Prometheus text exposition format:
+    backslash, double-quote, and newline must be backslash-escaped."""
+    return (
+        str(value)
+        .replace("\\", "\\\\")
+        .replace('"', '\\"')
+        .replace("\n", "\\n")
+    )
+
+
 def _prom_labels(labels: dict[str, str], extra: dict[str, str] | None = None) -> str:
     merged = {**labels, **(extra or {})}
     if not merged:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in sorted(merged.items()))
+    inner = ",".join(
+        f'{k}="{_prom_escape(v)}"' for k, v in sorted(merged.items())
+    )
     return "{" + inner + "}"
 
 

@@ -39,6 +39,8 @@ from repro.dataplane import fleet as _fleet
 from repro.dataplane.lowering import LoweredProgram, lower_program
 from repro.dataplane.plan import ExecutionPlan
 from repro.models import decode_step, init_cache, prefill
+from repro.obs.slo import BreachEvent, SloSpec, SloStatus, SloTracker
+from repro.obs.windows import WindowedHistogram, WindowedRate
 
 
 @dataclasses.dataclass
@@ -208,6 +210,67 @@ class FleetServeResult:
         return busy / self.wall_seconds if self.wall_seconds > 0 else 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetHealth:
+    """Live ``FleetEngine`` snapshot as of an explicit ``now``.
+
+    The windowed fields (aggregate and per-stream pps, chunk-latency p99,
+    SLO posture) come from the engine's explicit-timestamp windows — with
+    an injected deterministic ``clock`` they are a pure function of the
+    served blocks, which is what the determinism tests pin.
+    ``queue_depth`` is the one genuinely live field: the number of
+    assembled blocks waiting in the ingest queue at call time.
+    """
+
+    now: float
+    streams: int
+    queue_depth: int                   # blocks waiting in the ingest queue
+    queue_capacity: int
+    chunks: int                        # blocks dispatched since construction
+    packets: int                       # packets served since construction
+    windowed_pps: float                # aggregate rate over the trailing window
+    per_stream_pps: tuple[float, ...]  # same, per fleet stream
+    chunk_p99_s: float | None          # windowed p99 dispatch latency
+    overlap_ratio: float | None        # last completed serve() (None before)
+    slo: SloStatus | None              # None when no SLO was configured
+    breach_events: tuple[BreachEvent, ...]
+    roofline_pps_bound: float | None   # hardware ceiling of the compiled fn
+    roofline_fraction: float | None    # windowed_pps / bound
+
+    def render(self) -> str:
+        lines = [
+            f"fleet health @ {self.now:.3f}: {self.streams} stream(s), "
+            f"queue {self.queue_depth}/{self.queue_capacity}, "
+            f"{self.chunks} chunk(s) / {self.packets} packet(s) served",
+            f"  windowed: {self.windowed_pps:.4g} pps aggregate, "
+            f"chunk p99 "
+            + (f"{self.chunk_p99_s * 1e3:.3f}ms"
+               if self.chunk_p99_s is not None else "-"),
+        ]
+        if self.roofline_pps_bound is not None:
+            frac = (
+                f" ({self.roofline_fraction:.2e} of bound)"
+                if self.roofline_fraction is not None else ""
+            )
+            lines.append(
+                f"  roofline: {self.roofline_pps_bound:.4g} pps bound{frac}"
+            )
+        if self.slo is not None:
+            s = self.slo
+            burns = []
+            if s.delay_burn_rate is not None:
+                burns.append(f"delay burn {s.delay_burn_rate:.2f}x")
+            if s.pps_burn_rate is not None:
+                burns.append(f"pps burn {s.pps_burn_rate:.2f}x")
+            state = "BREACHED" if s.breached else "ok"
+            lines.append(
+                f"  slo[{s.tenant}]: {state} "
+                + (", ".join(burns) if burns else "no data")
+                + f", {len(self.breach_events)} breach event(s)"
+            )
+        return "\n".join(lines)
+
+
 class FleetEngine:
     """Async fleet pipeline: featurize/assemble blocks on a producer thread
     while the main thread runs the compiled fleet executable.
@@ -215,6 +278,14 @@ class FleetEngine:
     ``plan`` carries backend/chunk/fleet/devices exactly as in
     ``repro.dataplane.run``; ``queue_depth`` bounds how many assembled
     blocks may wait (bounded memory even when ingest outruns execution).
+
+    ``health()`` is the live snapshot API: sliding-window pps (aggregate
+    and per stream), queue depth, chunk-latency p99, and — when an
+    :class:`~repro.obs.slo.SloSpec` is passed — SLO burn rates and breach
+    events.  All window/SLO timestamps come from ``clock`` (default
+    ``time.perf_counter``), which is called only on the main dispatch
+    thread, once per served block: inject a deterministic clock and every
+    windowed health field becomes reproducible bit-for-bit.
     """
 
     def __init__(
@@ -223,6 +294,10 @@ class FleetEngine:
         *,
         plan: ExecutionPlan | None = None,
         queue_depth: int = 4,
+        slo: SloSpec | None = None,
+        clock: Callable[[], float] | None = None,
+        window_s: float = 10.0,
+        window_buckets: int = 10,
     ):
         self.lowered = (
             program
@@ -240,6 +315,78 @@ class FleetEngine:
             scan_hops=bool(self.plan.scan_hops),
             devices=self.plan.devices,
         )
+        # -- health-snapshot state (explicit-timestamp windows + SLO) -------
+        self._clock = clock or time.perf_counter
+        self.window_s = float(window_s)
+        self._window_buckets = int(window_buckets)
+        self._agg_rate = WindowedRate(self.window_s, buckets=window_buckets)
+        self._chunk_delay = WindowedHistogram(
+            self.window_s, buckets=window_buckets
+        )
+        self._stream_rates: list[WindowedRate] = []
+        self._slo = SloTracker(slo, buckets=window_buckets) if slo else None
+        self._queue: _queue.Queue | None = None
+        self._chunks_total = 0
+        self._packets_total = 0
+        self._last_result: FleetServeResult | None = None
+        self._roofline = None
+        self._last_now = 0.0
+
+    def health(self, now: float | None = None) -> FleetHealth:
+        """The live engine snapshot (see class docstring).  ``now`` defaults
+        to the engine clock; pass the timestamp explicitly to re-read a
+        window at a known instant (the deterministic-testing path)."""
+        if now is None:
+            now = self._clock()
+        q = self._queue
+        windowed = self._agg_rate.rate(now)
+        bound = (
+            self._roofline.roofline_pps if self._roofline is not None else None
+        )
+        return FleetHealth(
+            now=now,
+            streams=len(self._stream_rates),
+            queue_depth=q.qsize() if q is not None else 0,
+            queue_capacity=self.queue_depth,
+            chunks=self._chunks_total,
+            packets=self._packets_total,
+            windowed_pps=windowed,
+            per_stream_pps=tuple(
+                r.rate(now) for r in self._stream_rates
+            ),
+            chunk_p99_s=self._chunk_delay.p99(now),
+            overlap_ratio=(
+                self._last_result.overlap_ratio
+                if self._last_result is not None else None
+            ),
+            slo=self._slo.status(now) if self._slo is not None else None,
+            breach_events=(
+                tuple(self._slo.events) if self._slo is not None else ()
+            ),
+            roofline_pps_bound=bound,
+            roofline_fraction=(
+                windowed / bound if bound else None
+            ),
+        )
+
+    def _observe_block(self, now: float, dt: float, valid, served: int) -> None:
+        """Fold one dispatched block into the health windows (main thread
+        only; ``now`` comes from the injectable engine clock)."""
+        self._last_now = now
+        self._chunks_total += 1
+        self._packets_total += served
+        self._agg_rate.add(now, served)
+        self._chunk_delay.observe(now, dt, count=1)
+        for i, rate in enumerate(self._stream_rates):
+            v = int(valid[i])
+            if v:
+                rate.add(now, v)
+        if self._slo is not None:
+            self._slo.observe_packets(now, served)
+            # One fused dispatch serves the whole block: every packet in it
+            # waits exactly the dispatch latency.
+            self._slo.observe_queue_delay(now, dt, count=served)
+            self._slo.update(now)
 
     def serve(self, streams, *, collect: bool = False) -> FleetServeResult:
         """Drain every stream through the pipelined fleet; bit-exact per
@@ -252,7 +399,13 @@ class FleetEngine:
                 f"fleet of {n_streams} streams does not shard evenly over "
                 f"{self.plan.devices} devices"
             )
+        if len(self._stream_rates) != n_streams:  # fleet size changed: reset
+            self._stream_rates = [
+                WindowedRate(self.window_s, buckets=self._window_buckets)
+                for _ in range(n_streams)
+            ]
         q: _queue.Queue = _queue.Queue(maxsize=self.queue_depth)
+        self._queue = q
         ingest = [0.0]
         errors: list[BaseException] = []
 
@@ -298,14 +451,28 @@ class FleetEngine:
                         w0 = time.perf_counter()
                         self.fn(dev).block_until_ready()
                         warmup = time.perf_counter() - w0
+                    if obs.enabled():  # cost the compiled dispatch, once
+                        self._roofline = _fleet._probe_fleet_roofline(
+                            self.lowered, self.backend, n_streams,
+                            self.chunk, self.plan,
+                        )
+                served_now = int(valid.sum())
                 with obs.span(
                     "execute:fleet_chunk", cat="execute",
-                    packets=int(valid.sum()),
+                    packets=served_now,
                 ):
+                    # Health observations use the engine clock on both sides
+                    # of the dispatch (two calls per block, main thread only)
+                    # so an injected deterministic clock makes every windowed
+                    # health field reproducible; wall-clock bookkeeping for
+                    # the serve result stays on perf_counter.
+                    h0 = self._clock()
                     t0 = time.perf_counter()
                     res = np.asarray(self.fn(dev))
                     execute_seconds += time.perf_counter() - t0
+                    h1 = self._clock()
                 n_blocks += 1
+                self._observe_block(h1, max(h1 - h0, 0.0), valid, served_now)
                 for i in range(n_streams):
                     v = int(valid[i])
                     if not v:
@@ -320,6 +487,10 @@ class FleetEngine:
         total = int(per_stream.sum())
         if obs.enabled() and wall > 0:
             obs.registry().gauge("fleet.serve_pps").set(total / wall)
+            if self._roofline is not None:
+                _fleet._executor._record_roofline(
+                    self._roofline, total / wall
+                )
         outputs = None
         if collected is not None:
             outputs = [
@@ -328,7 +499,7 @@ class FleetEngine:
                 else np.zeros((0, self.lowered.output_bits), np.uint8)
                 for c in collected
             ]
-        return FleetServeResult(
+        result = FleetServeResult(
             streams=n_streams,
             packets=total,
             chunks=n_blocks,
@@ -339,6 +510,8 @@ class FleetEngine:
             per_stream_packets=per_stream,
             outputs=outputs,
         )
+        self._last_result = result
+        return result
 
 
 def _set_index(cache, value: int):

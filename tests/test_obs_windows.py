@@ -1,0 +1,256 @@
+"""Sliding windows + SLO trackers: rotation, merge algebra, determinism.
+
+The contract under test is the one ``FleetEngine.health()`` and the
+scheduler's SLO telemetry stand on: windows use absolute bucket indexing
+with explicit timestamps, so (a) rotation at bucket boundaries is exact,
+(b) ``merge`` is associative/commutative and equals single-stream
+observation, and (c) an SLO tracker's status and breach-event log are a
+pure function of (observations, update times) — chunking between updates
+and mid-stream restarts must not change them.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.obs.slo import (
+    QUEUE_DELAY,
+    THROUGHPUT,
+    SloSpec,
+    SloTracker,
+)
+from repro.obs.windows import WindowedHistogram, WindowedRate
+
+
+# ------------------------------------------------------------------ windows
+
+class TestWindowedRate:
+    def test_rotation_at_exact_boundaries(self):
+        w = WindowedRate(10.0, buckets=10)
+        w.add(0.5, 100)  # bucket 0: [0, 1)
+        # Visible while bucket 0's start (t=0.0) is inside (now - 10, now]:
+        # that is for every now strictly below 10.0, and gone at exactly 10.0
+        # — rotation happens at the bucket boundary, with no partial decay.
+        assert w.count(0.5) == 100
+        assert w.count(9.999) == 100
+        assert w.count(10.0) == 0
+        assert w.count(11.0) == 0
+
+    def test_window_includes_current_partial_bucket(self):
+        w = WindowedRate(10.0, buckets=10)
+        w.add(10.2, 7)    # bucket 10
+        assert w.count(10.2) == 7   # same-bucket query sees it immediately
+        assert w.rate(10.2) == pytest.approx(0.7)
+
+    def test_observations_spread_and_expire_one_bucket_at_a_time(self):
+        w = WindowedRate(4.0, buckets=4)
+        for t in (0.5, 1.5, 2.5, 3.5):
+            w.add(t, 10)
+        assert w.count(3.9) == 40
+        assert w.count(4.5) == 30   # bucket 0 out
+        assert w.count(5.5) == 20   # bucket 1 out
+        assert w.count(7.8) == 0
+
+    def test_merge_associative_commutative_and_equals_union(self):
+        rng = random.Random(7)
+        obs = [(rng.uniform(0, 20), k + 1) for k in range(60)]
+        thirds = [obs[0::3], obs[1::3], obs[2::3]]
+
+        def filled(chunks):
+            ws = []
+            for chunk in chunks:
+                w = WindowedRate(10.0, buckets=10)
+                for t, c in chunk:
+                    w.add(t, c)
+                ws.append(w)
+            return ws
+
+        # union oracle: everything observed into one window
+        union = WindowedRate(10.0, buckets=10)
+        for t, c in obs:
+            union.add(t, c)
+
+        a, b, c = filled(thirds)
+        ab_c = filled(thirds)
+        ab_c[0].merge(ab_c[1]); ab_c[0].merge(ab_c[2])     # (a+b)+c
+        c_ba = filled(thirds)
+        c_ba[2].merge(c_ba[1]); c_ba[2].merge(c_ba[0])     # (c+b)+a
+        # Query at/after the newest observation — the anchor pruning is
+        # guaranteed invisible for (partitions prune on their own maxima
+        # until the merge aligns them).
+        for now in (20.0, 22.5, 25.0, 31.0):
+            assert (
+                ab_c[0].count(now) == c_ba[2].count(now) == union.count(now)
+            )
+        assert union.count(20.0) > 0
+
+    def test_merge_rejects_incongruent_windows(self):
+        w = WindowedRate(10.0, buckets=10)
+        with pytest.raises(ValueError, match="cannot merge"):
+            w.merge(WindowedRate(5.0, buckets=10))
+        with pytest.raises(ValueError, match="cannot merge"):
+            w.merge(WindowedRate(10.0, buckets=5))
+
+    def test_pruning_is_query_invisible(self):
+        # Old observations beyond the horizon are dropped internally, but a
+        # query anchored at/after the newest observation cannot tell.
+        w = WindowedRate(2.0, buckets=2)
+        for t in range(100):
+            w.add(float(t), 1)
+        assert len(w._counts) <= w.buckets + 1
+        assert w.count(99.0) == 2
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="horizon"):
+            WindowedRate(0.0)
+        with pytest.raises(ValueError, match="buckets"):
+            WindowedRate(1.0, buckets=0)
+        w = WindowedRate(1.0)
+        w.add(0.0, 0)       # non-positive counts are ignored
+        w.add(0.0, -5)
+        assert w.count(0.0) == 0
+
+
+class TestWindowedHistogram:
+    def test_windowed_quantile_rotates(self):
+        h = WindowedHistogram(10.0, buckets=10)
+        h.observe(1.0, 0.100, count=100)  # slow early packets
+        h.observe(9.0, 0.001, count=100)  # fast late packets
+        assert h.p99(9.0) == pytest.approx(0.100, rel=0.05)
+        # Once the slow bucket rotates out, the p99 collapses.
+        assert h.p99(12.0) == pytest.approx(0.001, rel=0.05)
+        assert h.count(12.0) == 100
+        assert h.quantile(25.0, 0.99) is None  # empty window
+
+    def test_merge_matches_union_and_checks_congruence(self):
+        rng = random.Random(3)
+        obs = [(rng.uniform(0, 12), rng.uniform(1e-4, 1e-1)) for _ in range(200)]
+        union = WindowedHistogram(10.0, buckets=10)
+        a = WindowedHistogram(10.0, buckets=10)
+        b = WindowedHistogram(10.0, buckets=10)
+        for i, (t, v) in enumerate(obs):
+            union.observe(t, v)
+            (a if i % 2 else b).observe(t, v)
+        a.merge(b)
+        for now in (12.0, 15.0, 18.0):
+            assert a.count(now) == union.count(now)
+            assert a.quantile(now, 0.5) == union.quantile(now, 0.5)
+            assert a.p99(now) == union.p99(now)
+        assert a.count(12.0) > 0
+        with pytest.raises(ValueError, match="cannot merge"):
+            a.merge(WindowedHistogram(3.0, buckets=10))
+
+
+# ------------------------------------------------------------------ SLO
+
+def _spec(**kw):
+    base = dict(
+        tenant="t0", p99_queue_delay_s=0.002, min_pps=1000.0, window_s=10.0
+    )
+    base.update(kw)
+    return SloSpec(**base)
+
+
+class TestSloSpec:
+    def test_needs_a_target_and_validates_ranges(self):
+        with pytest.raises(ValueError, match="at least one target"):
+            SloSpec("t")
+        with pytest.raises(ValueError, match="p99_queue_delay_s"):
+            SloSpec("t", p99_queue_delay_s=0.0)
+        with pytest.raises(ValueError, match="min_pps"):
+            SloSpec("t", min_pps=-1.0)
+        with pytest.raises(ValueError, match="budget_fraction"):
+            SloSpec("t", min_pps=1.0, budget_fraction=0.0)
+
+
+class TestSloTracker:
+    def test_idle_tracker_is_no_data_not_breaching(self):
+        tr = SloTracker(_spec())
+        st = tr.status(5.0)
+        assert st.delay_burn_rate is None and st.pps_burn_rate is None
+        assert not st.breached
+        assert tr.update(5.0) == [] and tr.events == []
+
+    def test_delay_burn_rate_is_exact_bad_fraction(self):
+        tr = SloTracker(_spec(budget_fraction=0.01))
+        tr.observe_queue_delay(1.0, 0.001, count=95)   # under target
+        tr.observe_queue_delay(1.0, 0.010, count=5)    # over target: 5%
+        st = tr.status(1.0)
+        assert st.delay_burn_rate == pytest.approx(5.0)
+        assert st.breached
+
+    def test_throughput_burn_rate_is_shortfall_over_budget(self):
+        tr = SloTracker(_spec(min_pps=1000.0, budget_fraction=0.01))
+        tr.observe_packets(9.9, 5000)   # windowed pps = 500 -> 50% shortfall
+        st = tr.status(9.9)
+        assert st.pps == pytest.approx(500.0)
+        assert st.pps_burn_rate == pytest.approx(50.0)
+
+    def test_breach_fires_once_and_rearms_on_recovery(self):
+        tr = SloTracker(_spec(p99_queue_delay_s=None))
+        tr.observe_packets(1.0, 20000)          # 2000 pps: ok
+        assert tr.update(1.0) == []
+        tr.observe_packets(11.5, 100)           # old bucket rotated: starving
+        (ev,) = tr.update(11.5)
+        assert ev.objective == THROUGHPUT and ev.burn_rate > 1.0
+        assert tr.update(12.0) == []            # still breaching: no new event
+        tr.observe_packets(13.0, 50000)         # recovered
+        assert tr.update(13.0) == []
+        tr.observe_packets(25.0, 1)             # breach again -> new event
+        assert len(tr.update(25.0)) == 1
+        assert [e.objective for e in tr.events] == [THROUGHPUT, THROUGHPUT]
+
+    def test_event_log_deterministic_under_chunking_and_reorder(self):
+        """Same observations + same update times => identical breach logs.
+        Windows are commutative in the observations, so the delivery order
+        *between* two updates must not matter (that is exactly the freedom
+        a chunked scheduler vs a resumed one exercises), and splitting the
+        deliveries into arbitrary batches must not matter either."""
+        rng = random.Random(11)
+        observations = []
+        t = 0.0
+        for _ in range(300):
+            t += rng.uniform(0.01, 0.3)
+            observations.append(
+                ("delay", t, rng.choice([0.0005, 0.0009, 0.004]),
+                 rng.randint(1, 40))
+            )
+            observations.append(("packets", t, rng.randint(1, 2000)))
+        update_times = [i * 0.5 for i in range(1, 120)]
+
+        def replay(shuffle_seed):
+            tr = SloTracker(_spec())
+            order = random.Random(shuffle_seed)
+            prev = float("-inf")
+            for ut in update_times:
+                batch = [o for o in observations if prev < o[1] <= ut]
+                if shuffle_seed is not None:
+                    order.shuffle(batch)   # delivery order inside the gap
+                for kind, *rest in batch:
+                    if kind == "delay":
+                        tr.observe_queue_delay(rest[0], rest[1], rest[2])
+                    else:
+                        tr.observe_packets(rest[0], rest[1])
+                tr.update(ut)
+                prev = ut
+            return tr
+
+        a, b, c = replay(None), replay(7), replay(23)
+        assert a.events == b.events == c.events
+        assert len(a.events) > 0      # the workload actually breaches
+        final = max(update_times)
+        assert a.status(final) == b.status(final) == c.status(final)
+
+    def test_status_fields_roundtrip(self):
+        tr = SloTracker(_spec())
+        tr.observe_queue_delay(2.0, 0.0015, count=10)
+        tr.observe_packets(2.0, 30000)
+        st = tr.status(2.0)
+        assert st.tenant == "t0" and st.window_s == 10.0
+        assert st.p99_queue_delay_s == pytest.approx(0.0015, rel=0.05)
+        assert st.delay_burn_rate == 0.0
+        assert st.pps == pytest.approx(3000.0)
+        assert st.pps_burn_rate == 0.0
+        assert not st.breached
+        assert dataclasses.replace(st, pps_burn_rate=2.0).breached
+        assert QUEUE_DELAY == "queue_delay"

@@ -1,0 +1,110 @@
+"""Append one benchmark run to the committed performance trajectory.
+
+Each invocation flattens the ``BENCH_<module>.json`` files a
+``benchmarks/run.py`` run produced — the same flattening
+``tools/check_bench_regression.py`` gates on — and appends a single JSON
+line to ``benchmarks/trajectory.jsonl``:
+
+* UTC timestamp and (when available) the git revision;
+* the budget env the run used (``DATAPLANE_BENCH_PACKETS`` etc.) — lines
+  are only rate-comparable when budgets match;
+* summed ``warmup_seconds`` / ``steady_seconds`` across modules, so
+  compile-time drift is tracked separately from execution;
+* every gated metric's value (``dataplane_packed_uniform_random.pps``,
+  ``dataplane_packed_roofline_frac``, ...).
+
+The file is append-only history: CI appends after the regression gate and
+uploads it as an artifact; committing it periodically gives the repo a
+performance trajectory that ``tools/obs_diff.py --baseline`` snapshots
+cannot (one line per run, not just latest-vs-baseline).
+
+Stdlib-only.  Usage::
+
+    python tools/bench_history.py [--bench-dir DIR]
+        [--history benchmarks/trajectory.jsonl] [--note TEXT]
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import glob
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import check_bench_regression as _cbr  # noqa: E402 - sibling tool import
+
+
+def _git_rev() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    return out.stdout.strip() or None if out.returncode == 0 else None
+
+
+def _module_timing(bench_dir: str) -> tuple[float, float]:
+    """Summed (warmup_seconds, steady_seconds) across BENCH payloads."""
+    warmup = steady = 0.0
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            continue
+        warmup += float(payload.get("warmup_seconds", 0.0) or 0.0)
+        steady += float(payload.get("steady_seconds", 0.0) or 0.0)
+    return warmup, steady
+
+
+def record(bench_dir: str, note: str | None = None) -> dict:
+    """Build one trajectory line from the BENCH files in ``bench_dir``."""
+    try:
+        metrics = _cbr.collect_metrics(bench_dir)
+    except FileNotFoundError as e:
+        raise SystemExit(str(e))
+    warmup, steady = _module_timing(bench_dir)
+    line = {
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "git": _git_rev(),
+        "budget_env": {k: os.environ.get(k) for k in _cbr.BUDGET_ENV},
+        "warmup_seconds": round(warmup, 3),
+        "steady_seconds": round(steady, 3),
+        "metrics": {k: metrics[k]["value"] for k in sorted(metrics)},
+    }
+    if note:
+        line["note"] = note
+    return line
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench-dir", default=".")
+    ap.add_argument(
+        "--history",
+        default=os.path.join("benchmarks", "trajectory.jsonl"),
+    )
+    ap.add_argument("--note", help="free-form tag stored with the line")
+    args = ap.parse_args(argv)
+
+    line = record(args.bench_dir, note=args.note)
+    os.makedirs(os.path.dirname(args.history) or ".", exist_ok=True)
+    with open(args.history, "a") as fh:
+        fh.write(json.dumps(line, sort_keys=True) + "\n")
+    print(
+        f"bench history: appended {len(line['metrics'])} metric(s) "
+        f"@ {line['git'] or '?'} to {args.history}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,12 @@ Tracked metrics (chosen to be meaningful at CI smoke budgets):
 * for rows that also carry a ``streams=`` count (the fleet benchmarks), a
   derived ``pps_per_stream`` (higher is better) — aggregate rate divided by
   fleet size, so a regression that only shows up per-switch is visible even
-  when the aggregate still clears the threshold.
+  when the aggregate still clears the threshold;
+* every ``roofline_frac`` value (higher is better), published flat as
+  ``<row>_roofline_frac`` (e.g. ``dataplane_packed_roofline_frac``) —
+  measured rate as a fraction of the analytic roofline packets/s bound
+  (``repro.roofline.dataplane``), so utilization regressions are gated even
+  when absolute rates still pass.
 
 The baseline records the budget env (``DATAPLANE_BENCH_PACKETS`` etc.) it
 was generated under; CI must run the benchmarks with the same budgets or
@@ -70,6 +75,12 @@ def collect_metrics(bench_dir: str) -> dict[str, dict]:
                         "value": val,
                         "higher_is_better": True,
                     }
+            frac = row["metrics"].get("roofline_frac")
+            if frac is not None and math.isfinite(frac) and frac > 0:
+                metrics[f"{row['name']}_roofline_frac"] = {
+                    "value": frac,
+                    "higher_is_better": True,
+                }
             pps = row["metrics"].get("pps")
             streams = row["metrics"].get("streams")
             if (

@@ -1,0 +1,292 @@
+"""Regression attribution: diff two observability exports (or bench runs)
+and say *where* a packets/s delta came from.
+
+A rate regression on its own is a mystery; the phase decomposition the obs
+layer records makes it attributable.  This tool compares two runs and
+splits every throughput delta into the phases that moved:
+
+* **two obs export dirs** (``repro.obs.export_all`` artifacts) — diffs the
+  trace's per-category wall time (``compile`` / ``execute`` / ``stream`` /
+  ``ingest``), every matching counter/gauge (the ``*.pps`` family first),
+  and histogram counts/means; the attribution table ranks phases by their
+  share of the wall-time delta;
+* **two BENCH_<module>.json files** (``benchmarks/run.py`` artifacts) —
+  diffs every parsed row metric plus the module's ``warmup_seconds`` vs
+  ``steady_seconds`` split, so a pps drop is labeled compile-side (warmup
+  grew) or execute-side (steady grew);
+* **--baseline benchmarks/baseline.json --bench-dir DIR** — flattens the
+  current BENCH files exactly like ``tools/check_bench_regression.py`` and
+  diffs against the committed baseline (no gating, just the deltas).
+
+Stdlib-only.  Usage::
+
+    python tools/obs_diff.py A_DIR B_DIR
+    python tools/obs_diff.py --bench BENCH_A.json BENCH_B.json
+    python tools/obs_diff.py --baseline benchmarks/baseline.json \
+        --bench-dir .
+
+Exits 0 always (attribution, not a gate — the gate is
+``check_bench_regression.py``) unless inputs are missing/malformed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import check_bench_regression as _cbr  # noqa: E402 - sibling tool import
+import obs_report as _report  # noqa: E402 - sibling tool import
+
+PHASES = ("compile", "execute", "stream", "ingest")
+
+
+def _fmt_delta(a: float | None, b: float | None) -> str:
+    """``a -> b (+x%)`` with dashes for missing sides."""
+    if a is None and b is None:
+        return "-"
+    if a is None:
+        return f"(new) {b:.4g}"
+    if b is None:
+        return f"{a:.4g} (gone)"
+    if a == 0:
+        return f"{a:.4g} -> {b:.4g}"
+    return f"{a:.4g} -> {b:.4g} ({(b - a) / abs(a):+.1%})"
+
+
+def _metric_key(row: dict) -> tuple:
+    labels = row.get("labels") or {}
+    return (row["name"], tuple(sorted(labels.items())))
+
+
+def _index(metrics: list[dict], kind: str) -> dict[tuple, dict]:
+    return {
+        _metric_key(m): m for m in metrics if m.get("type") == kind
+    }
+
+
+def diff_obs_dirs(dir_a: str, dir_b: str) -> list[str]:
+    lines: list[str] = []
+    out = lines.append
+
+    sides = []
+    for d in (dir_a, dir_b):
+        mp = _report._find_one(d, "_metrics.jsonl")
+        tp = _report._find_one(d, "_trace.json")
+        if mp is None and tp is None:
+            raise SystemExit(
+                f"no *_metrics.jsonl or *_trace.json under {d!r}; "
+                "export with repro.obs.export_all(dir) first"
+            )
+        sides.append(
+            (
+                _report.load_metrics(mp) if mp else [],
+                _report.load_trace(tp) if tp else [],
+            )
+        )
+    (met_a, ev_a), (met_b, ev_b) = sides
+    out(f"obs diff: {dir_a!r} (A) vs {dir_b!r} (B)")
+    out("")
+
+    tot_a = _report.phase_totals(ev_a)
+    tot_b = _report.phase_totals(ev_b)
+    cats = sorted(set(tot_a) | set(tot_b))
+    if cats:
+        out("== phase wall time (s) ==")
+        for cat in cats:
+            out(f"  {cat:<10} {_fmt_delta(tot_a.get(cat), tot_b.get(cat))}")
+        # Attribution: which phase owns the wall-time delta.  Top-level
+        # categories overlap (a compile span nests inside a stream span),
+        # so shares are of the summed absolute per-phase movement, not of
+        # an end-to-end wall clock.
+        deltas = {
+            c: tot_b.get(c, 0.0) - tot_a.get(c, 0.0)
+            for c in cats
+            if c in PHASES
+        }
+        moved = sum(abs(d) for d in deltas.values())
+        if moved > 0:
+            out("  attribution (share of phase-time movement):")
+            for cat in sorted(deltas, key=lambda c: -abs(deltas[c])):
+                if deltas[cat] == 0:
+                    continue
+                out(
+                    f"    {cat:<10} {deltas[cat]:+.4f}s "
+                    f"({abs(deltas[cat]) / moved:.0%})"
+                )
+        out("")
+
+    for kind in ("gauge", "counter"):
+        ia, ib = _index(met_a, kind), _index(met_b, kind)
+        keys = sorted(set(ia) | set(ib))
+        if not keys:
+            continue
+        # pps-family gauges lead: they are the deltas being attributed.
+        keys.sort(key=lambda k: (0 if "pps" in k[0] else 1, k))
+        out(f"== {kind}s ==")
+        for k in keys:
+            a, b = ia.get(k), ib.get(k)
+            label = k[0] + (
+                "{" + ",".join(f"{lk}={lv}" for lk, lv in k[1]) + "}"
+                if k[1]
+                else ""
+            )
+            out(
+                f"  {label:<44} "
+                f"{_fmt_delta(a and a.get('value'), b and b.get('value'))}"
+            )
+        out("")
+
+    ia, ib = _index(met_a, "histogram"), _index(met_b, "histogram")
+    keys = sorted(set(ia) | set(ib))
+    if keys:
+        out("== histograms (count / mean) ==")
+        for k in keys:
+            a, b = ia.get(k), ib.get(k)
+            label = k[0] + (
+                "{" + ",".join(f"{lk}={lv}" for lk, lv in k[1]) + "}"
+                if k[1]
+                else ""
+            )
+            out(
+                f"  {label:<44} "
+                f"n: {_fmt_delta(a and a.get('count'), b and b.get('count'))}"
+                f"  mean: "
+                f"{_fmt_delta(a and a.get('mean'), b and b.get('mean'))}"
+            )
+        out("")
+    return lines
+
+
+def _load_bench(path: str) -> dict:
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except OSError as e:
+        raise SystemExit(f"cannot read bench file {path!r}: {e}")
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"{path}: bad bench JSON: {e}")
+    if not isinstance(payload, dict) or "rows" not in payload:
+        raise SystemExit(f"{path}: not a BENCH_<module>.json payload")
+    return payload
+
+
+def diff_bench_files(path_a: str, path_b: str) -> list[str]:
+    lines: list[str] = []
+    out = lines.append
+    a, b = _load_bench(path_a), _load_bench(path_b)
+    out(f"bench diff: {path_a!r} (A) vs {path_b!r} (B)")
+    out("")
+
+    out("== module timing ==")
+    for key in ("seconds", "warmup_seconds", "steady_seconds"):
+        out(f"  {key:<16} {_fmt_delta(a.get(key), b.get(key))}")
+    dw = (b.get("warmup_seconds") or 0) - (a.get("warmup_seconds") or 0)
+    ds = (b.get("steady_seconds") or 0) - (a.get("steady_seconds") or 0)
+    moved = abs(dw) + abs(ds)
+    if moved > 0:
+        side = "compile-side (warmup)" if abs(dw) > abs(ds) else (
+            "execute-side (steady)"
+        )
+        out(
+            f"  attribution: {side} — warmup {dw:+.3f}s "
+            f"({abs(dw) / moved:.0%}), steady {ds:+.3f}s "
+            f"({abs(ds) / moved:.0%})"
+        )
+    out("")
+
+    rows_a = {r["name"]: r.get("metrics", {}) for r in a["rows"]}
+    rows_b = {r["name"]: r.get("metrics", {}) for r in b["rows"]}
+    out("== row metrics ==")
+    for name in sorted(set(rows_a) | set(rows_b)):
+        ma, mb = rows_a.get(name, {}), rows_b.get(name, {})
+        for key in sorted(set(ma) | set(mb)):
+            out(
+                f"  {name + '.' + key:<52} "
+                f"{_fmt_delta(ma.get(key), mb.get(key))}"
+            )
+    out("")
+    return lines
+
+
+def diff_vs_baseline(baseline_path: str, bench_dir: str) -> list[str]:
+    lines: list[str] = []
+    out = lines.append
+    try:
+        with open(baseline_path) as fh:
+            baseline = json.load(fh)
+    except OSError as e:
+        raise SystemExit(f"cannot read baseline {baseline_path!r}: {e}")
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"{baseline_path}: bad baseline JSON: {e}")
+    try:
+        current = _cbr.collect_metrics(bench_dir)
+    except FileNotFoundError as e:
+        raise SystemExit(str(e))
+    base = baseline.get("metrics", {})
+    out(
+        f"baseline diff: {baseline_path!r} (A) vs BENCH files in "
+        f"{bench_dir!r} (B)"
+    )
+    budgets = {
+        k: os.environ.get(k)
+        for k in _cbr.BUDGET_ENV
+        if baseline.get("budget_env", {}).get(k) != os.environ.get(k)
+    }
+    if budgets:
+        out(
+            "  WARNING: budget env differs from the baseline's — deltas "
+            "are not rate-comparable:"
+        )
+        for k, got in sorted(budgets.items()):
+            want = baseline.get("budget_env", {}).get(k)
+            out(f"    {k}: baseline={want!r} current={got!r}")
+    out("")
+    out("== gated metrics ==")
+    for name in sorted(set(base) | set(current)):
+        a = base.get(name, {}).get("value")
+        b = current.get(name, {}).get("value")
+        out(f"  {name:<52} {_fmt_delta(a, b)}")
+    out("")
+    return lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "paths", nargs="*",
+        help="two obs export dirs (default mode) or, with --bench, two "
+        "BENCH_<module>.json files",
+    )
+    ap.add_argument(
+        "--bench", action="store_true",
+        help="treat the two paths as BENCH_<module>.json files",
+    )
+    ap.add_argument(
+        "--baseline",
+        help="diff BENCH files in --bench-dir against this baseline.json",
+    )
+    ap.add_argument("--bench-dir", default=".")
+    args = ap.parse_args(argv)
+
+    if args.baseline:
+        if args.paths:
+            ap.error("--baseline takes no positional paths")
+        lines = diff_vs_baseline(args.baseline, args.bench_dir)
+    elif len(args.paths) == 2:
+        a, b = args.paths
+        if args.bench or (os.path.isfile(a) and os.path.isfile(b)):
+            lines = diff_bench_files(a, b)
+        else:
+            lines = diff_obs_dirs(a, b)
+    else:
+        ap.error("need two paths, or --baseline FILE")
+        return 2  # pragma: no cover - error() raises
+    print("\n".join(lines))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,10 @@ and a Chrome Trace Event JSON — and prints the operator's view of a run:
 * **top spans** — where the time went, by span name;
 * **per-tenant table** — packets / served / dropped / deferred and queue
   delay p50/p99 per tenant (from the ``mt.*`` metric family);
+* **hardware utilization** — the ``roofline.*`` gauge family grouped per
+  compiled path (``packed``, ``jnp``, ``fleetN:...``): analytic packets/s
+  bound, measured fraction of it, and bytes per packet
+  (``repro.roofline.dataplane``);
 * **counters, gauges, histograms** — everything else in the registry.
 
 Stdlib-only (CI's docs job runs it on a tiny traced run).  Usage::
@@ -16,8 +20,10 @@ Stdlib-only (CI's docs job runs it on a tiny traced run).  Usage::
     python tools/obs_report.py [DIR]                 # find obs_* files in DIR
     python tools/obs_report.py --metrics M.jsonl --trace T.json
 
-Exits non-zero if no artifact is found or a file is malformed — a smoke
-gate, not just a pretty-printer.
+Exits non-zero (with a one-line message, never a traceback) if no artifact
+is found or a file is missing/malformed — a smoke gate, not just a
+pretty-printer.  Partial exports are fine: rows missing optional fields
+render as zeros/dashes rather than crashing the report.
 """
 from __future__ import annotations
 
@@ -30,7 +36,11 @@ import sys
 
 def load_metrics(path: str) -> list[dict]:
     rows = []
-    with open(path) as fh:
+    try:
+        fh = open(path)
+    except OSError as e:
+        raise SystemExit(f"cannot read metrics file {path!r}: {e}")
+    with fh:
         for i, line in enumerate(fh, 1):
             line = line.strip()
             if not line:
@@ -39,6 +49,8 @@ def load_metrics(path: str) -> list[dict]:
                 row = json.loads(line)
             except json.JSONDecodeError as e:
                 raise SystemExit(f"{path}:{i}: bad JSONL line: {e}")
+            if not isinstance(row, dict):
+                raise SystemExit(f"{path}:{i}: metric row is not an object")
             if "name" not in row or "type" not in row:
                 raise SystemExit(f"{path}:{i}: metric missing name/type")
             rows.append(row)
@@ -46,12 +58,21 @@ def load_metrics(path: str) -> list[dict]:
 
 
 def load_trace(path: str) -> list[dict]:
-    with open(path) as fh:
-        payload = json.load(fh)
+    try:
+        fh = open(path)
+    except OSError as e:
+        raise SystemExit(f"cannot read trace file {path!r}: {e}")
+    with fh:
+        try:
+            payload = json.load(fh)
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"{path}: bad trace JSON: {e}")
+    if not isinstance(payload, dict):
+        raise SystemExit(f"{path}: trace payload is not an object")
     events = payload.get("traceEvents")
     if not isinstance(events, list):
         raise SystemExit(f"{path}: no traceEvents list")
-    return events
+    return [e for e in events if isinstance(e, dict)]
 
 
 def _fmt_s(seconds: float | None) -> str:
@@ -62,6 +83,12 @@ def _fmt_s(seconds: float | None) -> str:
     if seconds >= 1e-3:
         return f"{seconds * 1e3:.2f}ms"
     return f"{seconds * 1e6:.1f}us"
+
+
+def _fmt_g(value: float | None, spec: str) -> str:
+    if value is None:
+        return "-"
+    return format(value, spec)
 
 
 def _labels(row: dict) -> str:
@@ -82,17 +109,18 @@ def phase_totals(events: list[dict]) -> dict[str, float]:
     for evs in by_tid.values():
         for e in evs:
             depth = (e.get("args") or {}).get("depth", 0)
+            ts, dur = e.get("ts", 0), e.get("dur", 0)
             contained = any(
                 o is not e
                 and o.get("cat") == e.get("cat")
-                and o["ts"] <= e["ts"]
-                and o["ts"] + o["dur"] >= e["ts"] + e["dur"]
+                and o.get("ts", 0) <= ts
+                and o.get("ts", 0) + o.get("dur", 0) >= ts + dur
                 and (o.get("args") or {}).get("depth", 0) < depth
                 for o in evs
             )
             if not contained:
                 cat = e.get("cat", "span")
-                totals[cat] = totals.get(cat, 0.0) + e["dur"] / 1e6
+                totals[cat] = totals.get(cat, 0.0) + dur / 1e6
     return totals
 
 
@@ -104,7 +132,7 @@ def span_summary(events: list[dict]) -> list[tuple[str, str, int, float]]:
             continue
         key = (e.get("name", "?"), e.get("cat", "span"))
         n, tot = agg.get(key, (0, 0.0))
-        agg[key] = (n + 1, tot + e["dur"] / 1e6)
+        agg[key] = (n + 1, tot + e.get("dur", 0) / 1e6)
     rows = [(k[0], k[1], n, tot) for k, (n, tot) in agg.items()]
     rows.sort(key=lambda r: -r[3])
     return rows
@@ -130,20 +158,35 @@ def tenant_table(metrics: list[dict]) -> list[dict]:
             continue
         c = cell(tenant)
         if row["name"] == "mt.packets_total":
-            c["packets"] = int(row["value"])
+            c["packets"] = int(row.get("value", 0))
         elif row["name"] == "mt.served_total":
-            c["served"] = int(row["value"])
+            c["served"] = int(row.get("value", 0))
         elif row["name"] == "mt.dropped_total":
-            c["dropped"] = int(row["value"])
+            c["dropped"] = int(row.get("value", 0))
         elif row["name"] == "mt.deferred_total":
-            c["deferred"] = int(row["value"])
+            c["deferred"] = int(row.get("value", 0))
         elif row["name"] == "mt.slices_total":
-            c["slices"] = int(row["value"])
+            c["slices"] = int(row.get("value", 0))
         elif row["name"] == "mt.queue_delay_seconds":
             c["qdelay_p50"] = row.get("p50")
             c["qdelay_p99"] = row.get("p99")
             c["qdelay_n"] = row.get("count", 0)
     return [tenants[k] for k in sorted(tenants)]
+
+
+def roofline_table(metrics: list[dict]) -> list[dict]:
+    """Per-path rollup of the ``roofline.*`` gauge family
+    (``repro.roofline.dataplane.record``)."""
+    paths: dict[str, dict] = {}
+    for row in metrics:
+        if row.get("type") != "gauge" or not row["name"].startswith(
+            "roofline."
+        ):
+            continue
+        path = (row.get("labels") or {}).get("path", "?")
+        c = paths.setdefault(path, {"path": path})
+        c[row["name"].removeprefix("roofline.")] = row.get("value")
+    return [paths[k] for k in sorted(paths)]
 
 
 def render(metrics: list[dict], events: list[dict]) -> str:
@@ -188,18 +231,40 @@ def render(metrics: list[dict], events: list[dict]) -> str:
             )
         out("")
 
+    roofline = roofline_table(metrics)
+    if roofline:
+        out("== hardware utilization (roofline.*) ==")
+        out(
+            f"  {'path':<16} {'pps bound':>12} {'fraction':>10} "
+            f"{'bytes/pkt':>10} {'hlo bytes':>11} {'hlo flops':>11}"
+        )
+        for c in roofline:
+            frac = c.get("fraction")
+            out(
+                f"  {c['path']:<16} "
+                f"{_fmt_g(c.get('pps_bound'), '.3e'):>12} "
+                f"{_fmt_g(frac, '.2%'):>10} "
+                f"{_fmt_g(c.get('bytes_per_packet'), '.1f'):>10} "
+                f"{_fmt_g(c.get('hlo_bytes'), '.3e'):>11} "
+                f"{_fmt_g(c.get('hlo_flops'), '.3e'):>11}"
+            )
+        out("")
+
     counters = [m for m in metrics if m["type"] == "counter"]
-    gauges = [m for m in metrics if m["type"] == "gauge"]
+    gauges = [
+        m for m in metrics
+        if m["type"] == "gauge" and not m["name"].startswith("roofline.")
+    ]
     histos = [m for m in metrics if m["type"] == "histogram"]
     if counters:
         out("== counters ==")
         for m in counters:
-            out(f"  {m['name']}{_labels(m)} = {m['value']:g}")
+            out(f"  {m['name']}{_labels(m)} = {m.get('value', 0):g}")
         out("")
     if gauges:
         out("== gauges ==")
         for m in gauges:
-            out(f"  {m['name']}{_labels(m)} = {m['value']:g}")
+            out(f"  {m['name']}{_labels(m)} = {m.get('value', 0):g}")
         out("")
     if histos:
         out("== histograms ==")
@@ -210,7 +275,8 @@ def render(metrics: list[dict], events: list[dict]) -> str:
         for m in histos:
             label = f"{m['name']}{_labels(m)}"
             out(
-                f"  {label:<44} {m['count']:>7} {_fmt_s(m.get('mean')):>9} "
+                f"  {label:<44} {m.get('count', 0):>7} "
+                f"{_fmt_s(m.get('mean')):>9} "
                 f"{_fmt_s(m.get('p50')):>9} {_fmt_s(m.get('p95')):>9} "
                 f"{_fmt_s(m.get('p99')):>9} {_fmt_s(m.get('max')):>9}"
             )
