@@ -1,21 +1,27 @@
 """Multi-tenant scheduler benchmark: aggregate pkts/s vs tenant count.
 
-One shared chip serves 2..``MULTITENANT_BENCH_TENANTS`` independently
-compiled BNN classifiers over a mixed tagged stream, in both scheduling
-modes.  The two modes trade differently in software than on the ASIC:
-**merged** runs one fused pass over the *union* of all tenants' elements, so
-simulator cost per packet grows with tenant count (on the real chip those
-stages execute spatially in parallel — merged is the mode that keeps every
-tenant at line rate, which is what the analytic model in
-``SwitchScheduler.analytic_pps`` reports); **time-sliced** dispatches each
-tenant's narrow table separately and pays per-turn scheduling overhead
-instead.  This bench pins the simulator-side costs of both so regressions in
-either path are visible.
+One shared chip serves up to ``MULTITENANT_BENCH_TENANTS`` independently
+compiled BNN classifiers over a mixed tagged stream, across the three
+scheduling layouts.  **merged/interleave** packs every tenant's elements
+onto shared physical stages, so one fused pass costs the *deepest* tenant
+per chunk — the layout that scales to 100+ tenants;
+**merged/concat** stacks tenants end to end, so the pass costs the *sum*
+(swept only at small counts, where its narrower per-stage rows can still
+win); **time-sliced** dispatches each tenant's narrow table separately and
+pays per-turn scheduling overhead.  The headline gated metric is
+``dataplane_merged_interleaved`` — the worst interleaved aggregate rate
+over the 2..8-tenant counts, the regime where interleave must beat
+time-slicing (its ``advantage_vs_sliced`` ratio rides in the derived
+column).
 
-``MULTITENANT_BENCH_TENANTS`` caps the tenant sweep (default 4; CI smoke
-sets 3).  ``MULTITENANT_BENCH_PACKETS`` sets the stream length per run
-(default 200k; CI smoke shrinks it).  ``us_per_call`` is microseconds per
-scheduled device dispatch (merged: per mixed chunk; sliced: per turn).
+Tenant counts sweep the subset of {2, 8, 32, 128} allowed by
+``MULTITENANT_BENCH_TENANTS`` (default 8; CI pins 8 — the 32/128-tenant
+points are for workstation runs).  ``MULTITENANT_BENCH_PACKETS`` sets the
+stream length per run (default 200k; CI smoke shrinks it).  All layouts
+run on the packed backend (``MULTITENANT_BENCH_BACKEND`` overrides), where
+interleave uses the stacked widest-tenant dispatch
+(``executor.routed_packed_stacked_fn``).  ``us_per_call`` is microseconds
+per scheduled device dispatch (merged: per mixed chunk; sliced: per turn).
 """
 from __future__ import annotations
 
@@ -24,12 +30,13 @@ import os
 import numpy as np
 
 from repro.core import bnn, compile_bnn
-from repro.core.pipeline import ChipSpec
+from repro.core.pipeline import MAX_FIELDS, ChipSpec
 from repro.dataplane import (
     SwitchScheduler,
     TenantTrafficSpec,
     mixed_tenant_stream,
 )
+from repro.dataplane.lowering import lower_program, peak_stage_rows
 
 # Distinct small nets so merged tables mix shapes, scenarios, and widths.
 _SHAPES = [(32, 64, 32), (16, 32, 8), (32, 16), (8, 12, 6), (16, 8, 4), (32, 32, 4)]
@@ -55,41 +62,77 @@ def _tenant_pool(count: int):
     return progs, specs
 
 
+TENANT_COUNTS = (2, 8, 32, 128)
+CONCAT_MAX = 8     # concat's sum-scaling makes larger merges pointless
+SLICED_MAX = 32    # per-tenant dispatch cost dominates past this
+
+
 def rows() -> list[tuple[str, float, str]]:
-    max_tenants = max(2, int(os.environ.get("MULTITENANT_BENCH_TENANTS", 4)))
+    max_tenants = max(2, int(os.environ.get("MULTITENANT_BENCH_TENANTS", 8)))
     n_packets = int(os.environ.get("MULTITENANT_BENCH_PACKETS", 200_000))
-    chunk = min(1 << 14, n_packets)
-    progs, specs = _tenant_pool(max_tenants)
-    # Element/PHV budgets sized to admit the largest merge: the sweep is
-    # about scheduling cost, not admission (tests cover admission).
+    backend = os.environ.get("MULTITENANT_BENCH_BACKEND", "packed")
+    # Moderate chunks are the honest operating point for the comparison:
+    # merged pays one fused dispatch per chunk while time-slicing pays one
+    # per tenant turn, and giant chunks would amortize sliced's scheduling
+    # overhead away entirely (no real switch batches 16k packets before
+    # dispatching).
+    chunk = min(1 << 10, n_packets)
+    counts = [c for c in TENANT_COUNTS if c <= max_tenants]
+    progs, specs = _tenant_pool(counts[-1])
+    # Budgets sized to admit the largest merge in *either* layout (concat
+    # needs the element sum, interleave the widest shared stage): the sweep
+    # is about scheduling cost, not admission (tests cover admission).
     chip = ChipSpec(
         num_elements=sum(p.num_elements for p in progs) + 1,
         phv_bits=sum(p.peak_phv_bits for p in progs),
+        max_parallel_ops=max(
+            MAX_FIELDS,
+            peak_stage_rows([lower_program(p, compact=True) for p in progs]),
+        ),
         name="shared",
     )
 
     out = []
-    for count in range(2, max_tenants + 1):
+    interleave_pps: dict[int, float] = {}
+    sliced_pps: dict[int, float] = {}
+    for count in counts:
         sched = SwitchScheduler(chip, quantum=chunk)
         for i in range(count):
             sched.admit(progs[i], name=f"t{i}", weight=specs[i].weight)
-        for mode in ("merged", "time_sliced"):
-            res = sched.run(
-                mixed_tenant_stream(
-                    specs[:count], n_packets, chunk_size=chunk, seed=count
-                ),
-                mode=mode,
-                backend="jnp",
-                chunk_size=chunk,
-                collect=False,
-            )
+        runs = [("interleave", "merged", "interleave")]
+        if count <= CONCAT_MAX:
+            runs.append(("concat", "merged", "concat"))
+        if count <= SLICED_MAX:
+            runs.append(("sliced", "time_sliced", None))
+        repeats = max(1, int(os.environ.get("MULTITENANT_BENCH_REPEATS", 3)))
+        for tag, mode, layout in runs:
+            # Best-of-N: the clocked region per config is a few ms at CI
+            # budgets, so a single run is scheduler-noise-bound.
+            res = None
+            for _ in range(repeats):
+                r = sched.run(
+                    mixed_tenant_stream(
+                        specs[:count], n_packets, chunk_size=chunk,
+                        seed=count,
+                    ),
+                    mode=mode,
+                    merged=layout,
+                    backend=backend,
+                    chunk_size=chunk,
+                    collect=False,
+                )
+                if res is None or r.packets_per_second > res.packets_per_second:
+                    res = r
             dispatches = (
                 res.chunks
                 if mode == "merged"
                 else sum(st.slices for st in res.tenants)
             )
             per_pps = [st.packets_per_second for st in res.tenants]
-            tag = "merged" if mode == "merged" else "sliced"
+            if tag == "interleave":
+                interleave_pps[count] = res.packets_per_second
+            elif tag == "sliced":
+                sliced_pps[count] = res.packets_per_second
             out.append(
                 (
                     f"multitenant_{tag}_t{count}",
@@ -101,13 +144,30 @@ def rows() -> list[tuple[str, float, str]]:
                     f"warmup_us={1e6 * res.warmup_seconds:.0f}",
                 )
             )
+    # The gated headline: interleave's worst aggregate rate over the small
+    # counts (2..8 tenants), where it must at least match time-slicing.
+    small = [c for c in counts if c <= CONCAT_MAX]
+    headline = min(interleave_pps[c] for c in small)
+    advantage = min(
+        interleave_pps[c] / sliced_pps[c] for c in small if c in sliced_pps
+    )
+    out.append(
+        (
+            "dataplane_merged_interleaved",
+            0.0,
+            f"pps={headline:.3e} advantage_vs_sliced={advantage:.3f} "
+            f"tenants={max(small)}",
+        )
+    )
     footprint = sum(p.num_elements for p in progs)
     out.append(
         (
             "multitenant_footprint",
             0.0,
-            f"tenants={max_tenants} merged_elements={footprint} "
+            f"tenants={counts[-1]} concat_elements={footprint} "
+            f"interleave_elements={max(p.num_elements for p in progs)} "
             f"chip_elements={chip.num_elements} "
+            f"stage_rows={chip.max_parallel_ops} "
             f"phv_bits={sum(p.peak_phv_bits for p in progs)}",
         )
     )

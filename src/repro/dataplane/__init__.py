@@ -46,8 +46,12 @@ from repro.dataplane.lowering import (
 )
 from repro.dataplane.multitenant import (
     AdmissionError,
+    MERGED_LAYOUTS,
+    MergedProgram,
     SCHEDULER_MODES,
     SwitchScheduler,
+    interleave_lowered,
+    merge_lowered,
 )
 from repro.dataplane.pcap import (
     Capture,
@@ -85,7 +89,9 @@ __all__ = [
     "FleetRunResult",
     "FleetSpec",
     "LoweredProgram",
+    "MERGED_LAYOUTS",
     "MODES",
+    "MergedProgram",
     "PackedLayer",
     "PackedProgram",
     "PcapFormatError",
@@ -108,8 +114,10 @@ __all__ = [
     "fleet_fn",
     "generate",
     "get_scenario",
+    "interleave_lowered",
     "lower_program",
     "lowering",
+    "merge_lowered",
     "mixed_tenant_generate",
     "mixed_tenant_stream",
     "multitenant",

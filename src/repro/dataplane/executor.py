@@ -563,6 +563,298 @@ def run_hop(
     return regs
 
 
+# ---------------------------------------------------------------------------
+# Fused routed dispatch (merged multi-tenant programs)
+# ---------------------------------------------------------------------------
+
+_ROUTED_CACHE: dict[tuple, object] = {}
+
+
+def _routing_key(*tables: np.ndarray) -> int:
+    """Content hash of per-tenant routing tables.
+
+    Merged-program fingerprints are insertion-order canonical (so the table
+    caches dedupe permuted tenant sets), but the tenant-id-indexed routing
+    tables are NOT order-invariant — two schedulers admitting the same
+    programs in different orders share op-tables yet route differently.  The
+    routed caches therefore key on fingerprint *plus* routing content.
+    """
+    return hash(tuple(np.asarray(t).tobytes() for t in tables))
+
+
+def _invert_bit_routing(bit_table, valid_table, total_bits: int):
+    """Forward scatter tables -> inverse gather tables.
+
+    :func:`route_bits_in`'s per-packet scatter (``out.at[cols, idx].add``)
+    serializes on CPU/GPU — XLA lowers dynamic-index scatter-add to a
+    sequential loop.  The routing is a bijection from each program's valid
+    packet columns onto its disjoint window, so it inverts exactly: for
+    every dense position, which packet column feeds it (``src``) and
+    whether it is fed at all (``ok``).  The fused dispatch then needs only
+    ``take_along_axis`` gathers, which vectorize.
+    """
+    bt = np.asarray(bit_table)
+    vt = np.asarray(valid_table).astype(bool)
+    src = np.zeros((bt.shape[0], total_bits), np.int32)
+    ok = np.zeros((bt.shape[0], total_bits), np.uint32)
+    for p in range(bt.shape[0]):
+        cols = np.nonzero(vt[p])[0]
+        src[p, bt[p, cols]] = cols
+        ok[p, bt[p, cols]] = 1
+    return src, ok
+
+
+def _invert_parse_routing(slot_table, shift_table, valid_table):
+    """Register-file analogue of :func:`_invert_bit_routing`.
+
+    Each program maps its valid packet columns onto distinct
+    ``(slot, shift)`` pairs; only a handful of slots (the input registers)
+    ever receive parser bits.  Returns ``(slots, col, ok)`` where ``slots``
+    is that receiving set and ``col``/``ok`` are ``(programs, len(slots),
+    32)`` gather tables: word ``s`` of a packet's register file is the
+    OR over ``k`` of ``packet[col[p, s, k]] << k``.
+    """
+    st = np.asarray(slot_table)
+    sh = np.asarray(shift_table)
+    vt = np.asarray(valid_table).astype(bool)
+    num_programs = st.shape[0]
+    slots = np.unique(st[vt]) if vt.any() else np.zeros(1, np.int64)
+    index_of = {int(s): i for i, s in enumerate(slots)}
+    col = np.zeros((num_programs, len(slots), 32), np.int32)
+    ok = np.zeros((num_programs, len(slots), 32), np.uint32)
+    for p in range(num_programs):
+        for c in np.nonzero(vt[p])[0]:
+            col[p, index_of[int(st[p, c])], int(sh[p, c])] = c
+            ok[p, index_of[int(st[p, c])], int(sh[p, c])] = 1
+    return slots.astype(np.int32), col, ok
+
+
+def routed_fn(
+    lp: LoweredProgram,
+    in_slot: np.ndarray,
+    in_shift: np.ndarray,
+    in_valid: np.ndarray,
+    out_slot: np.ndarray,
+    out_shift: np.ndarray,
+    *,
+    backend: str = "jnp",
+    interpret: bool | None = None,
+):
+    """One-jit merged dispatch: routed parse -> opcode-run execution ->
+    routed deparse, compiled as a single ``(packets, program_ids) ->
+    output bits`` executable.
+
+    Fusing the three phases removes the per-chunk multi-dispatch overhead of
+    calling :func:`parse_packets_routed` / :func:`run_hop` /
+    :func:`deparse_regs_routed` separately (one device round-trip per opcode
+    run) — the register file never leaves the compiled computation.  Cached
+    per (program fingerprint, backend, interpret, routing content).
+    """
+    backend = resolve_backend(backend)
+    if backend == "packed":
+        raise ValueError(
+            "the packed backend routes dense bits, not register files; use "
+            "routed_packed_fn"
+        )
+    if backend == "pallas" and interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    key = (
+        lp.fingerprint(), backend, bool(interpret),
+        _routing_key(in_slot, in_shift, in_valid, out_slot, out_shift),
+    )
+    fn = _ROUTED_CACHE.get(key)
+    if fn is not None:
+        return fn
+    t = _device_tables(lp)
+    reg_slots, parse_col, parse_ok = _invert_parse_routing(
+        in_slot, in_shift, in_valid
+    )
+    n_slots = len(reg_slots)
+    d_reg_slots = jnp.asarray(reg_slots)
+    d_col = jnp.asarray(parse_col.reshape(parse_col.shape[0], -1))
+    d_ok = jnp.asarray(parse_ok.reshape(parse_ok.shape[0], -1))
+    d_out_slot = jnp.asarray(out_slot)
+    d_out_shift = jnp.asarray(out_shift)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    num_regs = lp.num_regs
+
+    def parse(packets: jax.Array, program_ids: jax.Array) -> jax.Array:
+        batch = packets.shape[0]
+        pkt = packets.astype(jnp.uint32)
+        cols = jnp.take(d_col, program_ids, axis=0)   # (batch, slots*32)
+        ok = jnp.take(d_ok, program_ids, axis=0)
+        bits = jnp.take_along_axis(pkt, cols, axis=1) & ok
+        words = jnp.sum(
+            bits.reshape(batch, n_slots, 32) << shifts[None, None, :],
+            axis=2,
+            dtype=jnp.uint32,
+        )
+        regs = jnp.zeros((num_regs, batch), jnp.uint32)
+        return regs.at[d_reg_slots].set(words.T)
+
+    if backend == "pallas":
+        from repro.kernels.optable_exec import optable_run_segmented
+
+        runs = t.runs
+        interp = bool(interpret)
+
+        @jax.jit
+        def fn(packets: jax.Array, program_ids: jax.Array) -> jax.Array:
+            regs = parse(packets, program_ids)
+            regs = optable_run_segmented(
+                regs, *t.ops, t.first_write, runs=runs, interpret=interp
+            )
+            return deparse_regs_routed(
+                regs, program_ids, d_out_slot, d_out_shift
+            )
+
+    else:
+        @jax.jit
+        def fn(packets: jax.Array, program_ids: jax.Array) -> jax.Array:
+            regs = parse(packets, program_ids)
+            for start, stop, used in t.runs:
+                regs = _element_scan(
+                    regs, tuple(a[start:stop] for a in t.ops), used
+                )
+            return deparse_regs_routed(
+                regs, program_ids, d_out_slot, d_out_shift
+            )
+
+    _ROUTED_CACHE[key] = fn
+    return fn
+
+
+def routed_packed_fn(
+    lp: LoweredProgram,
+    packed_in_bit: np.ndarray,
+    packed_out_bit: np.ndarray,
+    in_valid: np.ndarray,
+):
+    """Packed-backend twin of :func:`routed_fn`: route dense bits into the
+    merged packed program's input window, run the block-diagonal XNOR/popcnt
+    chain, and gather each packet's bits back out — one jit end to end."""
+    pp = lp.packed
+    if pp is None:
+        raise ValueError(
+            "merged program has no packed plan; every tenant must carry one "
+            "(compiler-built programs do)"
+        )
+    key = (
+        lp.fingerprint(), "packed",
+        _routing_key(packed_in_bit, in_valid, packed_out_bit),
+    )
+    fn = _ROUTED_CACHE.get(key)
+    if fn is not None:
+        return fn
+    inner = _packed_fn(lp)
+    src_tbl, ok_tbl = _invert_bit_routing(
+        packed_in_bit, in_valid, pp.input_bits
+    )
+    d_src = jnp.asarray(src_tbl)
+    d_ok = jnp.asarray(ok_tbl)
+    d_out = jnp.asarray(packed_out_bit)
+
+    @jax.jit
+    def fn(packets: jax.Array, program_ids: jax.Array) -> jax.Array:
+        pkt = packets.astype(jnp.uint32)
+        src = jnp.take(d_src, program_ids, axis=0)
+        ok = jnp.take(d_ok, program_ids, axis=0)
+        dense = jnp.take_along_axis(pkt, src, axis=1) & ok
+        return route_bits_out(inner(dense), program_ids, d_out)
+
+    _ROUTED_CACHE[key] = fn
+    return fn
+
+
+_ROUTED_STACK_CACHE: dict[tuple, object] = {}
+
+
+def routed_packed_stacked_fn(lowereds: tuple):
+    """Widest-tenant packed dispatch for an interleaved merge.
+
+    The block-diagonal merged packed program (``routed_packed_fn``) makes
+    every packet XNOR against every tenant's words — per-chunk work scales
+    with the *sum* of tenant widths.  Here each tenant's packed layers are
+    instead stacked along a leading tenant axis, padded to the widest
+    block per stage (pad neurons carry unreachable thresholds, so they
+    emit 0), and each packet gathers its own tenant's weight block by
+    ``program_id`` — per-chunk work scales with the *widest/deepest*
+    tenant per stage.  Inputs and outputs stay tenant-local (bit ``i`` of
+    tenant ``t`` lives at position ``i`` for every tenant), so no bit
+    routing is needed at either end.
+
+    Returns ``None`` when any tenant lacks a packed plan or uses a
+    non-trivial word layout (hand-assembled programs) — callers fall back
+    to the block-diagonal merged plan.
+    """
+    key = tuple(lp.fingerprint() for lp in lowereds)
+    fn = _ROUTED_STACK_CACHE.get(key)
+    if fn is not None:
+        return fn
+    packs = [lp.packed for lp in lowereds]
+    if any(pp is None for pp in packs):
+        return None
+    depth = max(len(pp.layers) for pp in packs)
+    columns = []
+    for pp in packs:
+        ls = list(pp.layers)
+        while len(ls) < depth:
+            ls.append(lowering.PackedLayer.identity(ls[-1].n_out))
+        for pl in ls:
+            bit = np.arange(pl.n_in)
+            if not (
+                np.array_equal(pl.in_word, bit // 32)
+                and np.array_equal(pl.in_shift, bit % 32)
+            ):
+                return None
+        columns.append(ls)
+    stacked = []
+    for layer_idx in range(depth):
+        pls = [c[layer_idx] for c in columns]
+        max_n = max(pl.n_out for pl in pls)
+        max_w = max(pl.n_words for pl in pls)
+        w = np.zeros((len(pls), max_n, max_w), np.uint32)
+        m = np.zeros((len(pls), max_n, max_w), np.uint32)
+        # Pad neurons can never fire: agreement tops out at 32 * words.
+        thr = np.full((len(pls), max_n), 0xFFFFFFFF, np.uint32)
+        for t, pl in enumerate(pls):
+            w[t, : pl.n_out, : pl.n_words] = pl.weights
+            m[t, : pl.n_out, : pl.n_words] = pl.mask
+            thr[t, : pl.n_out] = pl.thresholds
+        stacked.append(
+            (jnp.asarray(w), jnp.asarray(thr), jnp.asarray(m), max_w)
+        )
+    stacked = tuple(stacked)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    @jax.jit
+    def fn(packets: jax.Array, program_ids: jax.Array) -> jax.Array:
+        h = packets.astype(jnp.uint32)   # (batch, bits), tenant-local
+        for w_tbl, thr_tbl, m_tbl, n_words in stacked:
+            need = n_words * 32
+            if h.shape[1] < need:
+                h = jnp.pad(h, ((0, 0), (0, need - h.shape[1])))
+            else:
+                h = h[:, :need]
+            words = jnp.sum(
+                h.reshape(h.shape[0], n_words, 32) << shifts[None, None, :],
+                axis=2,
+                dtype=jnp.uint32,
+            )
+            w = jnp.take(w_tbl, program_ids, axis=0)  # (batch, maxN, maxW)
+            m = jnp.take(m_tbl, program_ids, axis=0)
+            thr = jnp.take(thr_tbl, program_ids, axis=0)
+            agree = jax.lax.population_count(
+                ~(words[:, None, :] ^ w) & m
+            )
+            count = jnp.sum(agree, axis=-1, dtype=jnp.uint32)
+            h = (count >= thr).astype(jnp.uint32)
+        return h.astype(jnp.int32)
+
+    _ROUTED_STACK_CACHE[key] = fn
+    return fn
+
+
 def _run_chunk(
     lp: LoweredProgram,
     packets: jax.Array,

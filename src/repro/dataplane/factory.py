@@ -32,9 +32,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import bnn, compile_bnn
-from repro.core.pipeline import ChipSpec, PipelineProgram
+from repro.core.pipeline import MAX_FIELDS, ChipSpec, PipelineProgram
 from repro.dataplane import traffic as _traffic
 from repro.dataplane.fabric import SwitchFabric
+from repro.dataplane.lowering import lower_program, peak_stage_rows
 from repro.dataplane.multitenant import SwitchScheduler
 
 
@@ -66,15 +67,17 @@ class FleetSpec:
     """The whole shared-chip fleet, declaratively.
 
     ``chip=None`` sizes the chip to exactly fit the tenant sum (every
-    program's elements plus one headroom element, summed peak PHV bits) —
-    the admission-always-succeeds default the examples want.  ``mode`` and
-    ``quantum`` are scheduler defaults; both can be overridden per
-    ``Fleet.scheduler`` call.
+    program's elements plus one headroom element, summed peak PHV bits, and
+    a per-stage ALU budget wide enough for an interleaved merge of every
+    tenant) — the admission-always-succeeds default the examples want.
+    ``mode``, ``merged`` (merged-table layout), and ``quantum`` are
+    scheduler defaults; all can be overridden per ``Fleet.scheduler`` call.
     """
 
     tenants: tuple
     chip: ChipSpec | None = None
     mode: str | None = None
+    merged: str | None = None
     quantum: int | None = None
     chip_name: str = "shared"
 
@@ -116,7 +119,11 @@ class Fleet:
         return len(self.programs)
 
     def scheduler(
-        self, *, mode: str | None = None, quantum: int | None = None
+        self,
+        *,
+        mode: str | None = None,
+        merged: str | None = None,
+        quantum: int | None = None,
     ) -> SwitchScheduler:
         """A fresh scheduler with every tenant admitted in spec order
         (fresh because admission/telemetry state is per run)."""
@@ -124,6 +131,9 @@ class Fleet:
         m = mode if mode is not None else self.spec.mode
         if m is not None:
             kw["mode"] = m
+        lay = merged if merged is not None else self.spec.merged
+        if lay is not None:
+            kw["merged"] = lay
         q = quantum if quantum is not None else self.spec.quantum
         if q is not None:
             kw["quantum"] = q
@@ -204,6 +214,15 @@ def build_fleet(spec: FleetSpec | dict | Sequence) -> Fleet:
     chip = spec.chip or ChipSpec(
         num_elements=sum(p.num_elements for p in programs) + 1,
         phv_bits=sum(p.peak_phv_bits for p in programs),
+        # Wide enough for the interleaved merged layout: its widest shared
+        # stage sums every tenant's rows at that stage, which can exceed
+        # one real chip's per-stage ALU count at high tenant counts.
+        max_parallel_ops=max(
+            MAX_FIELDS,
+            peak_stage_rows(
+                [lower_program(p, compact=True) for p in programs]
+            ),
+        ),
         name=spec.chip_name,
     )
     return Fleet(

@@ -9,14 +9,28 @@ serving analogue of ``serving/engine.py`` for the dataplane: a
 :class:`ChipSpec` and runs them over a *mixed* packet stream — packets tagged
 with tenant ids (``traffic.mixed_tenant_stream``) — in one of two modes:
 
-* **merged** — the tenants' op-tables are concatenated into one table with
-  per-program register-window offsets (``LoweredProgram.with_slot_window``)
-  and a program-id column, so a *single* fused executor pass serves every
-  tenant on the mixed stream at full line rate.  Windows are disjoint, so no
-  tenant's rows can address another tenant's registers: per-tenant results
-  are bit-exact with single-program runs by construction.  Feasible only
-  while the merged footprint fits the chip (sum of elements <= element
-  budget, sum of peak PHV footprints <= PHV bits).
+* **merged** — the tenants' op-tables fuse into one table over disjoint
+  register windows (``LoweredProgram.with_slot_window``), so a *single*
+  fused executor pass serves every tenant on the mixed stream at full line
+  rate.  Windows are disjoint, so no tenant's rows can address another
+  tenant's registers: per-tenant results are bit-exact with single-program
+  runs by construction.  Two layouts (``merged=`` knob, default
+  ``"interleave"``):
+
+  - ``"interleave"`` — tenants' elements pack onto *shared physical
+    stages*: merged stage ``e`` runs element ``e`` of every tenant at once
+    (:func:`interleave_lowered`), so per-chunk work scales with the
+    *deepest* tenant, not the sum — merging amortizes, which is the whole
+    point of sharing a chip.  Budget: deepest tenant's elements <= element
+    budget, summed peak PHV <= PHV bits, and the widest shared stage's
+    summed rows <= ``ChipSpec.max_parallel_ops`` (the per-stage ALU count
+    all co-resident elements share).
+  - ``"concat"`` — tenants' tables concatenate stage-after-stage
+    (:func:`merge_lowered`): per-chunk work scales with the *sum* of
+    elements.  Budget: summed elements <= element budget, summed peak PHV
+    <= PHV bits.  Wins only when tenants' opcode mixes are so heterogeneous
+    that sharing stages would widen every opcode run (see
+    docs/DATAPLANE.md).
 * **time_sliced** — when the merged tables exceed the chip's element budget,
   the chip alternates between programs: packets are demultiplexed into
   per-tenant FIFO queues and served in weighted round-robin turns of at most
@@ -61,11 +75,14 @@ from repro.dataplane.lowering import (
     LoweredProgram,
     PackedLayer,
     PackedProgram,
+    interleave_tables,
     lower_program,
+    peak_stage_rows,
 )
 from repro.obs.slo import SloSpec, SloTracker
 
 SCHEDULER_MODES = ("auto", "merged", "time_sliced")
+MERGED_LAYOUTS = ("interleave", "concat")
 DEFAULT_QUANTUM = 4096
 
 
@@ -114,10 +131,46 @@ class MergedProgram:
     # ``out_bits`` on the way out).
     packed_in_bit: np.ndarray | None = None   # (T, max_in_bits) int32
     packed_out_bit: np.ndarray | None = None  # (T, max_out_bits) int32
+    # Table layout ("concat" stage-after-stage, "interleave" shared stages)
+    # and, for interleaved layouts, per-merged-row provenance: which tenant
+    # each row came from and its (element, row) coordinates in that tenant's
+    # own table (-1 for pad rows).  Provenance is what makes the interleave
+    # auditable — un-interleaving by it must reproduce every tenant's rows
+    # exactly (tenant_rows below; property-tested in test_multitenant.py).
+    layout: str = "concat"
+    row_tenant: np.ndarray | None = None      # (E, R) int32, -1 = pad
+    row_src_elem: np.ndarray | None = None    # (E, R) int32, -1 = pad
+    row_src_row: np.ndarray | None = None     # (E, R) int32, -1 = pad
 
     @property
     def num_tenants(self) -> int:
         return len(self.slot_windows)
+
+    def tenant_rows(self, tid: int):
+        """Un-interleave one tenant: its merged-table rows in (source
+        element, source row) order.
+
+        Returns ``(src_elem, src_row, fields)`` where ``fields`` maps each
+        op-table column name to that tenant's extracted values — comparing
+        them against the tenant's relocated single-program table proves the
+        interleave dropped, duplicated, and reordered nothing.
+        """
+        if self.row_tenant is None:
+            raise ValueError(
+                "row provenance only exists for layout='interleave'"
+            )
+        sel = self.row_tenant == tid
+        e = self.row_src_elem[sel]
+        r = self.row_src_row[sel]
+        order = np.lexsort((r, e))
+        fields = {
+            name: getattr(self.lowered, name)[sel][order]
+            for name in (
+                "opcode", "dst", "src0", "src1", "imm0", "imm1", "mask",
+                "first_write",
+            )
+        }
+        return e[order], r[order], fields
 
 
 def _merge_packed(
@@ -315,6 +368,130 @@ def merge_lowered(
     )
 
 
+def interleave_lowered(
+    lowereds: Sequence[LoweredProgram], chip: ChipSpec
+) -> MergedProgram:
+    """Interleave lowered programs onto shared physical stages.
+
+    Merged stage ``e`` carries element ``e`` of every tenant at once
+    (``lowering.interleave_tables``), so the merged element count is the
+    *deepest* tenant's — per-chunk executor work stops scaling with the
+    tenant count.  Register windows stay disjoint exactly as in
+    :func:`merge_lowered`, so per-tenant bit-exactness still holds by
+    construction.  Purely structural — no budget checks (the scheduler's
+    admission/mode logic owns those, including the shared-stage
+    ``max_parallel_ops`` row budget).
+
+    Canonical construction: parts are relocated and interleaved in
+    fingerprint-sorted order, so the merged tables — and the merged
+    fingerprint, which keys every executor device cache — are invariant to
+    tenant insertion order.  The tenant-id-indexed routing tables produced
+    alongside are permuted back to admission order (they are *not*
+    order-invariant; ``executor._routing_key`` accounts for that).
+    """
+    if not lowereds:
+        raise ValueError("interleave_lowered needs at least one program")
+    t_count = len(lowereds)
+    order = sorted(range(t_count), key=lambda t: lowereds[t].fingerprint())
+    total_slots = sum(lp.num_slots for lp in lowereds)
+    null = total_slots
+
+    parts_canon: list[LoweredProgram] = []
+    windows_canon: list[tuple[int, int]] = []
+    offset = 0
+    for t in order:
+        lp = lowereds[t]
+        parts_canon.append(lp.with_slot_window(offset, total_slots))
+        windows_canon.append((offset, offset + lp.num_slots))
+        offset += lp.num_slots
+
+    it = interleave_tables(parts_canon)
+    max_in = int(max(lp.input_bits for lp in lowereds))
+    max_out = int(max(lp.output_bits for lp in lowereds))
+    packed_plan, pk_in_canon, pk_out_canon = _merge_packed(
+        [lowereds[t] for t in order], max_in, max_out
+    )
+
+    merged = LoweredProgram(
+        source_fingerprint=(
+            "interleave("
+            + "+".join(p.fingerprint() for p in parts_canon)
+            + ")"
+        ),
+        chip_name=chip.name,
+        num_slots=total_slots,
+        input_bits=max_in,
+        output_bits=max_out,
+        opcode=it.opcode,
+        dst=it.dst,
+        src0=it.src0,
+        src1=it.src1,
+        imm0=it.imm0,
+        imm1=it.imm1,
+        mask=it.mask,
+        first_write=it.first_write,
+        rows_per_element=it.rows_per_element,
+        element_stages=it.element_stages,
+        num_ops=it.num_ops,
+        # As in merge_lowered: per-packet-bit parser tables are ill-defined
+        # for a merged program; the routed tables below replace them.
+        in_slot_per_bit=np.zeros(0, np.int32),
+        in_shift_per_bit=np.zeros(0, np.uint32),
+        out_slot_per_bit=np.zeros(0, np.int32),
+        out_shift_per_bit=np.zeros(0, np.uint32),
+        opcode_counts=it.opcode_counts,
+        packed=packed_plan,
+    )
+
+    # Canonical part position -> admission-order tenant id, and back.
+    order_arr = np.asarray(order, np.int32)
+    pos = np.empty(t_count, np.int64)
+    pos[order_arr] = np.arange(t_count)
+    row_tenant = np.where(
+        it.row_part >= 0, order_arr[it.row_part], np.int32(-1)
+    ).astype(np.int32)
+
+    in_slot = np.full((t_count, max_in), null, np.int32)
+    in_shift = np.zeros((t_count, max_in), np.uint32)
+    in_valid = np.zeros((t_count, max_in), np.uint32)
+    out_slot = np.full((t_count, max_out), null, np.int32)
+    out_shift = np.zeros((t_count, max_out), np.uint32)
+    for tid in range(t_count):
+        p = parts_canon[pos[tid]]
+        lp = lowereds[tid]
+        in_slot[tid, : lp.input_bits] = p.in_slot_per_bit
+        in_shift[tid, : lp.input_bits] = p.in_shift_per_bit
+        in_valid[tid, : lp.input_bits] = 1
+        out_slot[tid, : lp.output_bits] = p.out_slot_per_bit
+        out_shift[tid, : lp.output_bits] = p.out_shift_per_bit
+
+    return MergedProgram(
+        lowered=merged,
+        # Shared stages have no single owning tenant: the program-id column
+        # is -1 everywhere (routing happens per packet, not per element).
+        element_program=np.full(merged.num_elements, -1, np.int32),
+        slot_windows=tuple(
+            windows_canon[pos[tid]] for tid in range(t_count)
+        ),
+        element_ranges=tuple(
+            (0, lowereds[tid].num_elements) for tid in range(t_count)
+        ),
+        in_slot=in_slot,
+        in_shift=in_shift,
+        in_valid=in_valid,
+        out_slot=out_slot,
+        out_shift=out_shift,
+        in_bits=np.array([lp.input_bits for lp in lowereds], np.int32),
+        out_bits=np.array([lp.output_bits for lp in lowereds], np.int32),
+        packed_in_bit=None if pk_in_canon is None else pk_in_canon[pos],
+        packed_out_bit=None if pk_out_canon is None else pk_out_canon[pos],
+        layout="interleave",
+        row_tenant=row_tenant,
+        row_src_elem=it.row_src_elem,
+        row_src_row=it.row_src_row,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Run results
 # ---------------------------------------------------------------------------
@@ -348,6 +525,7 @@ class SchedulerRunResult:
     chunks: int
     tenants: list[TenantRunStats]
     warmup_seconds: float = 0.0  # jit warm calls across programs (compile)
+    merged_layout: str | None = None  # "interleave"/"concat" for merged runs
 
     @property
     def packets_per_second(self) -> float:
@@ -407,6 +585,9 @@ class SwitchScheduler:
     falls back to weighted-round-robin time-slicing when it does not;
     ``"merged"``/``"time_sliced"`` force one strategy (forced merge makes
     admission reject overflowing programs instead of falling back).
+    ``merged`` picks the merged-table layout: ``"interleave"`` (default —
+    tenants' elements share physical stages, work scales with the deepest
+    tenant) or ``"concat"`` (stage-after-stage, work scales with the sum).
     """
 
     def __init__(
@@ -414,6 +595,7 @@ class SwitchScheduler:
         chip: ChipSpec = RMT,
         *,
         mode: str = "auto",
+        merged: str = "interleave",
         quantum: int = DEFAULT_QUANTUM,
         max_queue: int | None = None,
         clock=None,
@@ -422,16 +604,22 @@ class SwitchScheduler:
             raise ValueError(
                 f"mode must be one of {SCHEDULER_MODES}, got {mode!r}"
             )
+        if merged not in MERGED_LAYOUTS:
+            raise ValueError(
+                f"merged layout must be one of {MERGED_LAYOUTS}, "
+                f"got {merged!r}"
+            )
         if quantum < 1:
             raise ValueError(f"quantum must be >= 1, got {quantum}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.chip = chip
         self.mode = mode
+        self.merged_layout = merged
         self.quantum = quantum
         self.max_queue = max_queue
         self.tenants: list[Tenant] = []
-        self._merged: MergedProgram | None = None
+        self._merged: dict[str, MergedProgram] = {}
         self._last_run: SchedulerRunResult | None = None
         # SLO tracking (repro.obs.slo): per-tenant-name trackers fed from the
         # run paths with timestamps from ``clock`` (default perf_counter —
@@ -442,19 +630,65 @@ class SwitchScheduler:
 
     # -- admission -----------------------------------------------------------
 
-    def _merged_footprint(self, extra: PipelineProgram | None = None):
+    def _merged_footprint(
+        self,
+        extra: PipelineProgram | None = None,
+        layout: str | None = None,
+    ):
+        """(elements, PHV bits) one merged pass would occupy under
+        ``layout``: interleaved stages host every tenant's element ``e`` at
+        once, so elements is the *max* across tenants; concatenation stacks
+        them, so it is the sum.  PHV windows are disjoint either way."""
+        layout = layout or self.merged_layout
         progs = [t.program for t in self.tenants]
         if extra is not None:
             progs.append(extra)
-        return (
-            sum(p.num_elements for p in progs),
-            sum(p.peak_phv_bits for p in progs),
+        if not progs:
+            return 0, 0
+        elements = (
+            max(p.num_elements for p in progs)
+            if layout == "interleave"
+            else sum(p.num_elements for p in progs)
         )
+        return elements, sum(p.peak_phv_bits for p in progs)
 
-    def merge_feasible(self, extra: PipelineProgram | None = None) -> bool:
-        """Would the current tenants (plus ``extra``) fit one merged pass?"""
-        elements, phv = self._merged_footprint(extra)
-        return elements <= self.chip.num_elements and phv <= self.chip.phv_bits
+    def _interleave_stage_rows(
+        self, extra_lowered: LoweredProgram | None = None
+    ) -> int:
+        """Widest shared stage (summed op rows) an interleaved merge of the
+        current tenants (plus ``extra_lowered``) would need — held against
+        ``chip.max_parallel_ops``, the per-stage ALU budget."""
+        lows = [t.lowered for t in self.tenants]
+        if extra_lowered is not None:
+            lows.append(extra_lowered)
+        return peak_stage_rows(lows)
+
+    def merge_feasible(
+        self,
+        extra: PipelineProgram | None = None,
+        *,
+        extra_lowered: LoweredProgram | None = None,
+        layout: str | None = None,
+    ) -> bool:
+        """Would the current tenants (plus ``extra``) fit one merged pass
+        under ``layout`` (default: the scheduler's configured layout)?
+
+        Interleaved merges additionally hold the widest shared stage
+        against ``chip.max_parallel_ops``; pass ``extra_lowered`` to reuse
+        an already-lowered ``extra`` (it is lowered here otherwise).
+        """
+        layout = layout or self.merged_layout
+        elements, phv = self._merged_footprint(extra, layout=layout)
+        if elements > self.chip.num_elements or phv > self.chip.phv_bits:
+            return False
+        if layout == "interleave":
+            if extra is not None and extra_lowered is None:
+                extra_lowered = lower_program(extra, compact=True)
+            return (
+                self._interleave_stage_rows(extra_lowered)
+                <= self.chip.max_parallel_ops
+            )
+        return True
 
     def admit(
         self,
@@ -485,8 +719,25 @@ class SwitchScheduler:
                 f"program peak PHV {prog.peak_phv_bits}b exceeds chip "
                 f"{self.chip.name!r} PHV {self.chip.phv_bits}b"
             )
-        if self.mode == "merged" and not self.merge_feasible(prog):
+        lowered = lower_program(prog, compact=True)
+        if self.mode == "merged" and not self.merge_feasible(
+            prog, extra_lowered=lowered
+        ):
             elements, phv = self._merged_footprint(prog)
+            if (
+                elements <= self.chip.num_elements
+                and phv <= self.chip.phv_bits
+            ):
+                # Element and PHV budgets hold, so the interleave-specific
+                # shared-stage row budget is what failed.
+                rows = self._interleave_stage_rows(lowered)
+                raise AdmissionError(
+                    f"interleaved merge would need {rows} parallel ops in "
+                    f"its widest shared stage against chip "
+                    f"{self.chip.name!r} max_parallel_ops "
+                    f"{self.chip.max_parallel_ops}; use mode='auto' to fall "
+                    "back to time-slicing"
+                )
             raise AdmissionError(
                 f"merged footprint would be {elements} elements / {phv}b PHV "
                 f"against a {self.chip.num_elements}-element / "
@@ -497,11 +748,11 @@ class SwitchScheduler:
             tid=len(self.tenants),
             name=name or f"tenant{len(self.tenants)}",
             program=prog,
-            lowered=lower_program(prog, compact=True),
+            lowered=lowered,
             weight=float(weight),
         )
         self.tenants.append(tenant)
-        self._merged = None  # table layout changed
+        self._merged.clear()  # table layouts changed
         return tenant
 
     def set_slo(self, spec: SloSpec) -> SloTracker:
@@ -538,19 +789,28 @@ class SwitchScheduler:
             return "merged" if self.merge_feasible() else "time_sliced"
         return self.mode
 
-    def merged(self) -> MergedProgram:
+    def merged(self, layout: str | None = None) -> MergedProgram:
         """The fused table for the current tenant set (cached per layout)."""
+        layout = layout or self.merged_layout
+        if layout not in MERGED_LAYOUTS:
+            raise ValueError(
+                f"merged layout must be one of {MERGED_LAYOUTS}, "
+                f"got {layout!r}"
+            )
         if not self.tenants:
             raise ValueError("no tenants admitted")
-        if self.mode != "merged" and not self.merge_feasible():
+        if self.mode != "merged" and not self.merge_feasible(layout=layout):
             raise ValueError(
                 "merged footprint exceeds the chip; run() would time-slice"
             )
-        if self._merged is None:
-            self._merged = merge_lowered(
-                [t.lowered for t in self.tenants], self.chip
+        mp = self._merged.get(layout)
+        if mp is None:
+            build = (
+                interleave_lowered if layout == "interleave" else merge_lowered
             )
-        return self._merged
+            mp = build([t.lowered for t in self.tenants], self.chip)
+            self._merged[layout] = mp
+        return mp
 
     def _quanta(self) -> list[int]:
         """Per-tenant packets per scheduling turn: the heaviest tenant gets
@@ -568,6 +828,7 @@ class SwitchScheduler:
         stream,
         *,
         mode: str | None = None,
+        merged: str | None = None,
         backend: str = "auto",
         chunk_size: int | None = None,
         collect: bool = True,
@@ -580,8 +841,9 @@ class SwitchScheduler:
         Per-tenant outputs (``collect=True``) are bit-exact with each
         tenant's single-program ``executor.execute`` over its served packets.
         A ``plan`` (:class:`repro.dataplane.plan.ExecutionPlan`) overrides
-        ``backend``/``chunk_size``/``interpret``; ``collect`` and ``mode``
-        stay scheduler-level knobs.
+        ``backend``/``chunk_size``/``interpret``/``merged``; ``collect`` and
+        ``mode`` stay scheduler-level knobs.  ``merged`` overrides the
+        scheduler's merged-table layout for this run only.
         """
         if plan is not None:
             backend = plan.backend_str
@@ -589,14 +851,22 @@ class SwitchScheduler:
                 chunk_size = plan.chunk_size
             if plan.interpret is not None:
                 interpret = plan.interpret
+            if getattr(plan, "merged", None) is not None:
+                merged = plan.merged
         if not self.tenants:
             raise ValueError("no tenants admitted")
+        layout = merged or self.merged_layout
+        if layout not in MERGED_LAYOUTS:
+            raise ValueError(
+                f"merged layout must be one of {MERGED_LAYOUTS}, "
+                f"got {layout!r}"
+            )
         mode = mode or self.resolve_mode()
         if mode not in ("merged", "time_sliced"):
             raise ValueError(
                 f"run mode must be 'merged' or 'time_sliced', got {mode!r}"
             )
-        if mode == "merged" and not self.merge_feasible():
+        if mode == "merged" and not self.merge_feasible(layout=layout):
             raise ValueError(
                 "merged footprint exceeds the chip; use mode='time_sliced'"
             )
@@ -608,7 +878,7 @@ class SwitchScheduler:
         stats = [TenantRunStats(t.tid, t.name) for t in self.tenants]
         if mode == "merged":
             result = self._run_merged(
-                stream, stats, backend, chunk, collect, interpret
+                stream, stats, backend, chunk, collect, interpret, layout
             )
         else:
             result = self._run_time_sliced(
@@ -629,18 +899,16 @@ class SwitchScheduler:
             )
 
     def _run_merged(
-        self, stream, stats, backend, chunk, collect, interpret
+        self, stream, stats, backend, chunk, collect, interpret, layout
     ) -> SchedulerRunResult:
-        mp = self.merged()
+        mp = self.merged(layout)
         lp = mp.lowered
-        in_slot = jnp.asarray(mp.in_slot)
-        in_shift = jnp.asarray(mp.in_shift)
-        in_valid = jnp.asarray(mp.in_valid)
-        out_slot = jnp.asarray(mp.out_slot)
-        out_shift = jnp.asarray(mp.out_shift)
         width = mp.in_slot.shape[1]
         collected: list[list[np.ndarray]] = [[] for _ in self.tenants]
 
+        # One fused executable per chunk: routed parse -> run -> routed
+        # deparse compiled together (executor.routed_fn / routed_packed_fn),
+        # so the register file never leaves the device between phases.
         if backend == "packed":
             if lp.packed is None or mp.packed_in_bit is None:
                 raise ValueError(
@@ -648,37 +916,37 @@ class SwitchScheduler:
                     "plan (compiler-built programs do); use an op-table "
                     "backend"
                 )
-            pk_in = jnp.asarray(mp.packed_in_bit)
-            pk_out = jnp.asarray(mp.packed_out_bit)
-            pk_total = lp.packed.input_bits
-
-            def push(tids_dev, bits_dev):
-                dense = _executor.route_bits_in(
-                    bits_dev, tids_dev, pk_in, in_valid,
-                    total_bits=pk_total,
+            fn = None
+            if layout == "interleave":
+                # Widest-tenant dispatch: stack per-tenant packed layers and
+                # gather each packet's weight block by tenant id, so chunk
+                # work scales with the widest/deepest tenant instead of the
+                # block-diagonal sum.  Declines (returns None) for
+                # hand-assembled layouts; fall back to the merged plan.
+                fn = _executor.routed_packed_stacked_fn(
+                    tuple(t.lowered for t in self.tenants)
                 )
-                res = _executor._packed_fn(lp)(dense)
-                return _executor.route_bits_out(res, tids_dev, pk_out)
-
+            if fn is None:
+                fn = _executor.routed_packed_fn(
+                    lp, mp.packed_in_bit, mp.packed_out_bit, mp.in_valid
+                )
         else:
-            def push(tids_dev, bits_dev):
-                regs = _executor.parse_packets_routed(
-                    bits_dev, tids_dev, in_slot, in_shift, in_valid,
-                    num_regs=lp.num_regs,
-                )
-                regs = _executor.run_hop(
-                    lp, regs, backend=backend, interpret=interpret
-                )
-                return _executor.deparse_regs_routed(
-                    regs, tids_dev, out_slot, out_shift
-                )
+            fn = _executor.routed_fn(
+                lp,
+                mp.in_slot, mp.in_shift, mp.in_valid,
+                mp.out_slot, mp.out_shift,
+                backend=backend, interpret=interpret,
+            )
+
+        def push(tids_dev, bits_dev):
+            return fn(bits_dev, tids_dev)
 
         seconds = 0.0
         warmup = 0.0
         n_chunks = 0
         with obs.span(
             "stream:mt_merged", cat="stream",
-            tenants=len(self.tenants), backend=backend,
+            tenants=len(self.tenants), backend=backend, layout=layout,
         ):
             for tids, bits in _rechunk_mixed(stream, chunk):
                 self._check_chunk(tids, bits, width)
@@ -755,6 +1023,7 @@ class SwitchScheduler:
             chunks=n_chunks,
             tenants=stats,
             warmup_seconds=warmup,
+            merged_layout=layout,
         )
 
     def _run_time_sliced(

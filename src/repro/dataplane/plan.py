@@ -92,6 +92,10 @@ class ExecutionPlan:
                     does not divide the device count, else all local
                     devices).
     ``collect``     keep outputs (streaming paths default to stats-only).
+    ``merged``      multi-tenant merged-table layout ("interleave" packs
+                    tenants' elements onto shared stages, "concat" stacks
+                    them; None -> the scheduler's configured layout).  Only
+                    meaningful when running a ``SwitchScheduler``.
     """
 
     backend: Backend | str = Backend.AUTO
@@ -101,6 +105,7 @@ class ExecutionPlan:
     fleet: int | None = None
     devices: int | None = None
     collect: bool = False
+    merged: str | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "backend", Backend.coerce(self.backend))
@@ -110,6 +115,13 @@ class ExecutionPlan:
             raise ValueError(f"fleet must be >= 1, got {self.fleet}")
         if self.devices is not None and self.devices < 1:
             raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.merged is not None and self.merged not in (
+            "interleave", "concat"
+        ):
+            raise ValueError(
+                "merged must be 'interleave', 'concat', or None, "
+                f"got {self.merged!r}"
+            )
 
     @property
     def backend_str(self) -> str:
@@ -142,6 +154,7 @@ def run(program, stream, *, plan: ExecutionPlan | None = None):
             chunk_size=plan.chunk_size,
             collect=True,
             interpret=plan.interpret,
+            merged=plan.merged,
         )
 
     if isinstance(program, _fabric.SwitchFabric):

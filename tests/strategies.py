@@ -39,19 +39,23 @@ from repro.core.pipeline import ChipSpec
 
 __all__ = [
     "BuiltProgram",
+    "FUZZ_PCAP_SCENARIO",
     "HAVE_HYPOTHESIS",
     "HEAVY_EXAMPLES",
     "ProgramCase",
+    "TenantMixCase",
     "artifact_on_failure",
     "build_case",
     "chip_specs",
     "fleet_plans",
     "given",
+    "mix_traffic",
     "packets_for",
     "program_cases",
     "settings",
     "st",
     "stream_plans",
+    "tenant_mixes",
 ]
 
 MAX_WIDTH = 48  # keeps compiles fast while still crossing the 32-bit word
@@ -210,6 +214,99 @@ def fleet_plans(
             lambda ls: st.integers(min_value=1, max_value=max_chunk).flatmap(
                 lambda c: st.integers(min_value=0, max_value=_SEED_MAX).map(
                     lambda seed: (tuple(ls), c, seed)
+                )
+            )
+        )
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantMixCase:
+    """A random multi-tenant scenario: N independent programs, each with a
+    traffic identity (synthetic scenario or a pcap-backed replay), plus one
+    shared mixed-stream shape."""
+
+    cases: tuple[ProgramCase, ...]    # one program per tenant
+    scenarios: tuple[str, ...]        # per-tenant traffic scenario name
+    n_packets: int
+    chunk: int
+    seed: int
+
+    @property
+    def num_tenants(self) -> int:
+        return len(self.cases)
+
+
+# The pcap-backed tenant scenario the mixes draw from: a deterministic
+# synthesized capture, registered lazily (and idempotently) on first use.
+FUZZ_PCAP_SCENARIO = "pcap:fuzzmix"
+_SCENARIO_NAMES = (
+    "adversarial_bitflip",
+    "ddos_burst",
+    "flow_tuple",
+    "iot_telemetry",
+    "uniform_random",
+    FUZZ_PCAP_SCENARIO,
+)
+_pcap_registered = False
+
+
+def _ensure_fuzz_pcap_scenario() -> None:
+    global _pcap_registered
+    if _pcap_registered:
+        return
+    from repro.dataplane import pcap
+
+    pkts, ts, _ = pcap.synthesize_capture(512, seed=0xF0CC)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    pcap.register_pcap_scenario(FUZZ_PCAP_SCENARIO, cap, overwrite=True)
+    _pcap_registered = True
+
+
+def mix_traffic(mix: TenantMixCase):
+    """The mix's deterministic ``(tenant_ids, bits)`` mixed stream (pcap
+    scenario registered on demand)."""
+    from repro.dataplane import traffic
+
+    if FUZZ_PCAP_SCENARIO in mix.scenarios:
+        _ensure_fuzz_pcap_scenario()
+    specs = [
+        traffic.TenantTrafficSpec(scen, case.layer_sizes[0], 1.0)
+        for case, scen in zip(mix.cases, mix.scenarios)
+    ]
+    return traffic.mixed_tenant_generate(specs, mix.n_packets, seed=mix.seed)
+
+
+def tenant_mixes(
+    max_tenants: int = 4,
+    min_tenants: int = 2,
+    max_layers: int = 2,
+    max_width: int = 16,
+    max_packets: int = 200,
+    max_chunk: int = 64,
+):
+    """Random :class:`TenantMixCase`s: 2..max_tenants programs of mixed
+    widths/depths, each paired with a scenario (pcap-backed tenants
+    included), plus a stream length / chunk size / traffic seed."""
+    case = program_cases(max_layers=max_layers, max_width=max_width)
+    scen = st.sampled_from(_SCENARIO_NAMES)
+    return st.integers(min_value=min_tenants, max_value=max_tenants).flatmap(
+        lambda t: st.lists(case, min_size=t, max_size=t).flatmap(
+            lambda cs: st.lists(scen, min_size=t, max_size=t).flatmap(
+                lambda ss: st.integers(
+                    min_value=1, max_value=max_packets
+                ).flatmap(
+                    lambda n: st.integers(
+                        min_value=1, max_value=max_chunk
+                    ).flatmap(
+                        lambda c: st.integers(
+                            min_value=0, max_value=_SEED_MAX
+                        ).map(
+                            lambda seed: TenantMixCase(
+                                tuple(cs), tuple(ss), n, c, seed
+                            )
+                        )
+                    )
                 )
             )
         )

@@ -21,15 +21,18 @@ import pytest
 from strategies import (
     HEAVY_EXAMPLES,
     ProgramCase,
+    TenantMixCase,
     artifact_on_failure,
     build_case,
     chip_specs,
     given,
+    mix_traffic,
     packets_for,
     program_cases,
     settings,
     st,
     stream_plans,
+    tenant_mixes,
 )
 
 from repro.core import bitops, bnn, interpreter
@@ -307,6 +310,65 @@ def test_fuzz_multitenant_packed_bit_exact(case_a, case_b, plan):
                     singles[t],
                     err_msg=f"mode {mode!r} tenant {t} diverges",
                 )
+
+
+@given(tenant_mixes(max_tenants=4))
+@settings(max_examples=HEAVY_EXAMPLES)
+def test_fuzz_tenant_mix_all_schedules_agree(mix: TenantMixCase):
+    """The five-way equivalence on random tenant mixes: merged-interleave
+    == merged-concat == time-sliced == the per-tenant single-program
+    executor == the ``bnn.forward`` oracle, on the jnp and packed
+    backends alike (pcap-backed tenants included)."""
+    with artifact_on_failure("fuzz_tenant_mix_all_schedules_agree", mix):
+        from repro.core.pipeline import ChipSpec
+
+        builts = [build_case(c) for c in mix.cases]
+        tids, bits = mix_traffic(mix)
+        chip = ChipSpec(
+            num_elements=1024,
+            phv_bits=1 << 16,
+            max_parallel_ops=1 << 12,
+            name="fuzz-mix",
+        )
+        sched = SwitchScheduler(chip, quantum=max(1, mix.chunk))
+        for t, b in enumerate(builts):
+            sched.admit(b.program, name=f"t{t}")
+        singles = []
+        for t, b in enumerate(builts):
+            mine = bits[tids == t][:, : b.program.input_bits]
+            want = executor.execute(b.lowered, mine, backend="jnp")
+            np.testing.assert_array_equal(
+                want, _oracle(b, mine),
+                err_msg=f"tenant {t} single-program run diverges from oracle",
+            )
+            singles.append(want)
+        schedules = (
+            ("merged", "interleave"),
+            ("merged", "concat"),
+            ("time_sliced", None),
+        )
+        for backend in ("jnp", "packed"):
+            for mode, layout in schedules:
+                res = sched.run(
+                    (tids, bits),
+                    mode=mode,
+                    merged=layout,
+                    backend=backend,
+                    chunk_size=mix.chunk,
+                    collect=True,
+                )
+                assert res.mode == mode
+                if mode == "merged":
+                    assert res.merged_layout == layout
+                for t in range(mix.num_tenants):
+                    np.testing.assert_array_equal(
+                        res.outputs_for(t),
+                        singles[t],
+                        err_msg=(
+                            f"backend {backend!r} {mode}/{layout} tenant "
+                            f"{t} diverges from its single-program run"
+                        ),
+                    )
 
 
 @given(program_cases(max_layers=2, max_width=24), chip_specs())

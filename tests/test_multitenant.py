@@ -23,7 +23,8 @@ from repro.dataplane import (
     mixed_tenant_stream,
     traffic,
 )
-from repro.dataplane.multitenant import merge_lowered
+from repro.dataplane.lowering import peak_stage_rows
+from repro.dataplane.multitenant import interleave_lowered, merge_lowered
 
 SHAPES = [(16, 8, 4), (32, 16), (8, 12, 6)]
 SPECS = [
@@ -83,6 +84,92 @@ def test_merge_lowered_layout(tenants3):
             seg = tbl[a:b]
             ok = ((seg >= s0) & (seg < s1)) | (seg == null)
             assert ok.all()
+
+
+def test_interleave_lowered_windows_disjoint_per_row(tenants3):
+    """Every interleaved row addresses only its owner tenant's window."""
+    lps = [prog.lower() for _, prog in tenants3]
+    mp = interleave_lowered(lps, BIG)
+    assert mp.layout == "interleave"
+    # Slot windows are pairwise disjoint and inside the shared file.
+    spans = sorted(mp.slot_windows)
+    assert all(a[1] <= b[0] for a, b in zip(spans, spans[1:]))
+    assert spans[0][0] >= 0 and spans[-1][1] <= mp.lowered.num_slots
+    null = mp.lowered.null_slot
+    for t in range(len(lps)):
+        s0, s1 = mp.slot_windows[t]
+        sel = mp.row_tenant == t
+        assert sel.any()
+        for tbl in (mp.lowered.dst, mp.lowered.src0, mp.lowered.src1):
+            seg = tbl[sel]
+            ok = ((seg >= s0) & (seg < s1)) | (seg == null)
+            assert ok.all()
+    # Pad rows own no tenant; true rows all do.
+    total_true = sum(int(lp.rows_per_element.sum()) for lp in lps)
+    assert int((mp.row_tenant >= 0).sum()) == total_true
+
+
+def test_interleave_invariant_to_insertion_order(tenants3):
+    """Same tenant set, any admission order -> the same fingerprint-keyed
+    merged plan (tables included), so compiled executors are shared."""
+    lps = [prog.lower() for _, prog in tenants3]
+    perm = [2, 0, 1]
+    mp_a = interleave_lowered(lps, BIG)
+    mp_b = interleave_lowered([lps[t] for t in perm], BIG)
+    assert mp_a.lowered.fingerprint() == mp_b.lowered.fingerprint()
+    for name in ("opcode", "dst", "src0", "src1", "imm0", "imm1", "mask",
+                 "first_write", "rows_per_element"):
+        np.testing.assert_array_equal(
+            getattr(mp_a.lowered, name), getattr(mp_b.lowered, name)
+        )
+    # Routing stays tid-indexed: tenant t in mp_a is tenant perm.index(t)
+    # in mp_b, and their windows/IO tables must agree.
+    for t_a, t_b in [(t, perm.index(t)) for t in range(len(lps))]:
+        assert mp_a.slot_windows[t_a] == mp_b.slot_windows[t_b]
+        np.testing.assert_array_equal(
+            mp_a.in_slot[t_a], mp_b.in_slot[t_b]
+        )
+        np.testing.assert_array_equal(
+            mp_a.out_slot[t_a], mp_b.out_slot[t_b]
+        )
+
+
+def test_interleave_uninterleave_round_trips_each_tenant(tenants3):
+    """``tenant_rows`` recovers every tenant's relocated table exactly."""
+    lps = [prog.lower() for _, prog in tenants3]
+    mp = interleave_lowered(lps, BIG)
+    fields = ("opcode", "dst", "src0", "src1", "imm0", "imm1", "mask",
+              "first_write")
+    for t, lp in enumerate(lps):
+        rel = lp.with_slot_window(
+            mp.slot_windows[t][0], mp.lowered.num_slots
+        )
+        elems, rows, got = mp.tenant_rows(t)
+        assert elems.shape == rows.shape == (int(lp.rows_per_element.sum()),)
+        # Per-element row counts survive the round trip.
+        np.testing.assert_array_equal(
+            np.bincount(elems, minlength=lp.num_elements),
+            lp.rows_per_element,
+        )
+        for name in fields:
+            np.testing.assert_array_equal(
+                got[name], getattr(rel, name)[elems, rows]
+            )
+
+
+def test_peak_stage_rows_matches_manual_sum(tenants3):
+    lps = [prog.lower() for _, prog in tenants3]
+    max_e = max(lp.num_elements for lp in lps)
+    want = max(
+        sum(
+            int(lp.rows_per_element[e])
+            for lp in lps
+            if e < lp.num_elements
+        )
+        for e in range(max_e)
+    )
+    assert peak_stage_rows(lps) == want
+    assert peak_stage_rows([]) == 0
 
 
 def test_merged_register_windows_reject_bad_fit(tenants3):
@@ -166,19 +253,46 @@ def test_admission_rejects_oversized_program(tenants3):
 
 
 def test_admission_forced_merged_rejects_overflow_auto_falls_back(tenants3):
+    # Concat layout sums element footprints, so a chip one element short of
+    # the pair still rejects a forced merged admit.
     _, a = tenants3[0]
     _, b = tenants3[2]
     chip = ChipSpec(num_elements=a.num_elements + b.num_elements - 1)
-    forced = SwitchScheduler(chip, mode="merged")
+    forced = SwitchScheduler(chip, mode="merged", merged="concat")
     forced.admit(a)
     with pytest.raises(AdmissionError, match="merged footprint"):
         forced.admit(b)
-    auto = SwitchScheduler(chip, mode="auto")
+    auto = SwitchScheduler(chip, mode="auto", merged="concat")
     auto.admit(a)
     auto.admit(b)
     assert auto.resolve_mode() == "time_sliced"
     with pytest.raises(ValueError, match="time-slice|time_sliced"):
         auto.run(mixed_tenant_generate(SPECS[:2], 64, seed=0), mode="merged")
+
+
+def test_admission_interleave_rejects_on_stage_budget(tenants3):
+    # Interleave's budget is the widest *shared stage*, not the element sum:
+    # a chip whose per-stage ALU count is one short of the pair's peak
+    # rejects under interleave but still admits under concat.
+    _, a = tenants3[0]
+    _, b = tenants3[2]
+    lps = [a.lower(), b.lower()]
+    peak = peak_stage_rows(lps)
+    assert peak > max(peak_stage_rows([lp]) for lp in lps)
+    chip = ChipSpec(num_elements=256, max_parallel_ops=peak - 1)
+    forced = SwitchScheduler(chip, mode="merged")  # interleave default
+    forced.admit(a)
+    with pytest.raises(AdmissionError, match="parallel ops"):
+        forced.admit(b)
+    auto = SwitchScheduler(chip, mode="auto")
+    auto.admit(a)
+    auto.admit(b)
+    assert auto.resolve_mode() == "time_sliced"
+    # Concat does not share stages, so the same chip merges fine.
+    concat = SwitchScheduler(chip, mode="merged", merged="concat")
+    concat.admit(a)
+    concat.admit(b)
+    assert concat.resolve_mode() == "merged"
 
 
 def test_scheduler_requires_tenants_and_validates_ids(tenants3):
@@ -235,7 +349,9 @@ def test_multitenant_telemetry_rollup(tenants3):
     tel = sched.telemetry(res)
     assert tel.mode == "merged"
     assert tel.total_packets == n and tel.total_dropped == 0
-    assert tel.elements_used == sum(p.num_elements for _, p in tenants3)
+    # Interleave packs tenants onto shared stages: the footprint is the
+    # deepest tenant, not the sum.
+    assert tel.elements_used == max(p.num_elements for _, p in tenants3)
     assert tel.elements_available == BIG.num_elements
     weights = [t.weight for t in tel.tenants]
     assert weights == [3.0, 1.0, 2.0]

@@ -1,0 +1,277 @@
+"""Tenancy at fleet scale: 100+ tenants on one shared chip.
+
+The interleaved merged layout is what makes this census possible — concat
+would need the *sum* of every tenant's elements while interleave needs the
+*deepest* tenant (plus a per-stage ALU budget for the widest shared stage).
+This suite stresses the full contract at 120 tenants: deterministic
+admission against the shared-stage budgets, per-tenant bit-exactness of
+every served packet on the jnp and packed backends, conservation of the
+tail-drop/deferral accounting under IAT-driven arrivals (capture-derived
+inter-arrival times via an injectable clock), and bit-identical SLO
+breach-event logs across identical runs.
+
+Everything here is ``@pytest.mark.stress`` (deselected from tier-1 by
+``pytest.ini``; CI runs it in the fuzz job with failure artifacts).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import bnn, compile_bnn
+from repro.core.pipeline import ChipSpec
+from repro.dataplane import (
+    AdmissionError,
+    SwitchScheduler,
+    TenantTrafficSpec,
+    execute,
+    mixed_tenant_generate,
+    mixed_tenant_stream,
+    pcap,
+)
+from repro.dataplane.lowering import peak_stage_rows
+from repro.obs.slo import SloSpec
+
+pytestmark = pytest.mark.stress
+
+NUM_TENANTS = 120
+# Tiny mixed shapes: depth 1..2, widths crossing neither word boundary —
+# the point is tenant *count*, not per-tenant size.
+SHAPE_CYCLE = [(4, 2), (6, 4), (8, 4, 2), (5, 3, 2), (3, 5)]
+SCENARIO_CYCLE = [
+    "uniform_random",
+    "iot_telemetry",
+    "ddos_burst",
+    "flow_tuple",
+    "pcap:stress",
+]
+PCAP_SCENARIO = "pcap:stress"
+
+
+class FakeClock:
+    """Deterministic monotone clock: every call advances by ``step``."""
+
+    def __init__(self, step: float = 0.25, start: float = 0.0):
+        self.t = start
+        self.step = step
+        self.calls = 0
+
+    def __call__(self) -> float:
+        self.calls += 1
+        self.t += self.step
+        return self.t
+
+
+class IatClock:
+    """A clock that replays capture inter-arrival times, cyclically.
+
+    Deterministic by construction (same timestamps -> same tick sequence),
+    so two runs under two fresh ``IatClock``s over the same capture see
+    identical arrival/serve timestamps.
+    """
+
+    def __init__(self, timestamps, scale: float = 1.0):
+        iats = np.diff(np.asarray(timestamps, np.float64))
+        iats = iats[iats > 0]
+        self._iats = iats * scale if iats.size else np.array([1e-3])
+        self.t = 0.0
+        self.calls = 0
+
+    def __call__(self) -> float:
+        self.t += float(self._iats[self.calls % self._iats.size])
+        self.calls += 1
+        return self.t
+
+
+def _compiled(sizes, seed):
+    params = bnn.init_params(bnn.BnnSpec(tuple(sizes)), jax.random.PRNGKey(seed))
+    return compile_bnn([np.asarray(w) for w in params])
+
+
+@pytest.fixture(scope="module")
+def census():
+    """120 compiled tenants + traffic specs + a chip sized so interleave
+    (and only interleave) fits them all, plus the capture whose IATs drive
+    the arrival clock."""
+    pkts, ts, _ = pcap.synthesize_capture(600, seed=11)
+    cap = pcap.read_pcap(pcap.write_pcap(pkts, ts))
+    pcap.register_pcap_scenario(PCAP_SCENARIO, cap, overwrite=True)
+
+    programs = []
+    specs = []
+    for i in range(NUM_TENANTS):
+        shape = SHAPE_CYCLE[i % len(SHAPE_CYCLE)]
+        prog = _compiled(shape, seed=i)
+        programs.append(prog)
+        specs.append(
+            TenantTrafficSpec(
+                SCENARIO_CYCLE[i % len(SCENARIO_CYCLE)],
+                prog.input_bits,
+                1.0 + (i % 3),
+            )
+        )
+    lowereds = [p.lower() for p in programs]
+    peak = peak_stage_rows(lowereds)
+    # PHV carries 2KiB of slack so an extra tenant is judged against the
+    # *stage* budget (the interleave-specific one), not the PHV sum.
+    chip = ChipSpec(
+        num_elements=max(p.num_elements for p in programs) + 4,
+        phv_bits=sum(p.peak_phv_bits for p in programs) + 2048,
+        max_parallel_ops=peak + 8,
+        name="stress-chip",
+    )
+    # The chip must be a genuine interleave-only regime: concat's element
+    # sum cannot fit, interleave's max does.
+    assert sum(p.num_elements for p in programs) > chip.num_elements
+    return programs, specs, chip, ts
+
+
+def _admit_all(census, **kw):
+    programs, specs, chip, _ = census
+    sched = SwitchScheduler(chip, **kw)
+    for i, (prog, spec) in enumerate(zip(programs, specs)):
+        sched.admit(prog, name=f"t{i}", weight=spec.weight)
+    return sched
+
+
+# -- admission at scale -------------------------------------------------------
+
+def test_stress_admission_admits_120_and_rejects_hogs_deterministically(
+    census,
+):
+    programs, _, chip, _ = census
+
+    def build():
+        sched = _admit_all(census, mode="merged")
+        assert len(sched.tenants) == NUM_TENANTS
+        # Hog 1: more elements than the whole chip -> per-program reject.
+        hog_elems = _compiled((8, 8, 8, 8, 8, 8, 8, 8), seed=999)
+        assert hog_elems.num_elements > chip.num_elements
+        try:
+            sched.admit(hog_elems, name="hog-elems")
+        except AdmissionError as e:
+            err_elems = str(e)
+        else:
+            raise AssertionError("element hog admitted")
+        # Hog 2: fits the element budget but blows the widest shared
+        # stage past max_parallel_ops -> interleave budget reject.
+        hog_wide = _compiled((32, 24), seed=998)
+        assert hog_wide.num_elements <= chip.num_elements
+        try:
+            sched.admit(hog_wide, name="hog-wide")
+        except AdmissionError as e:
+            err_wide = str(e)
+        else:
+            raise AssertionError("stage hog admitted")
+        assert "parallel ops" in err_wide
+        # Rejection never half-admits.
+        assert len(sched.tenants) == NUM_TENANTS
+        return err_elems, err_wide
+
+    assert build() == build()  # bit-identical admit/reject decisions
+
+
+# -- per-tenant bit-exactness of every served packet --------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "packed"])
+def test_stress_merged_interleave_bit_exact_120_tenants(census, backend):
+    programs, specs, _, _ = census
+    sched = _admit_all(census, mode="merged")
+    n = 6000
+    tids, bits = mixed_tenant_generate(specs, n, seed=13)
+    res = sched.run(
+        (tids, bits),
+        mode="merged",
+        backend=backend,
+        chunk_size=1024,
+        collect=True,
+    )
+    assert res.mode == "merged" and res.merged_layout == "interleave"
+    assert res.packets == n
+    served = 0
+    for t, prog in enumerate(programs):
+        mine = bits[tids == t][:, : prog.input_bits]
+        st = res.stats_for(t)
+        assert st.packets == st.served == mine.shape[0]
+        assert st.dropped == 0
+        want = execute(sched.tenants[t].lowered, mine, backend="jnp")
+        np.testing.assert_array_equal(
+            res.outputs_for(t),
+            want,
+            err_msg=f"tenant {t} diverges on backend {backend!r}",
+        )
+        served += st.served
+    assert served == n
+
+
+# -- IAT-driven time-slicing: conservation + determinism ----------------------
+
+def _sliced_run(census, *, max_queue, quantum, n=4000):
+    _, specs, _, ts = census
+    sched = _admit_all(
+        census,
+        mode="time_sliced",
+        clock=IatClock(ts, scale=4.0),
+        max_queue=max_queue,
+        quantum=quantum,
+    )
+    res = sched.run(
+        mixed_tenant_stream(specs, n, chunk_size=1000, seed=21),
+        mode="time_sliced",
+    )
+    return sched, res
+
+
+def test_stress_time_sliced_iat_arrivals_conserve_and_drop(census):
+    n = 4000
+    _, res = _sliced_run(census, max_queue=16, quantum=8, n=n)
+    assert res.packets == n
+    # Small queues under bursty IAT arrivals must tail-drop somewhere,
+    # and quantum 8 against 1000-packet bursts must defer.
+    assert sum(st.dropped for st in res.tenants) > 0
+    assert sum(st.deferred for st in res.tenants) > 0
+    total_served = 0
+    for st in res.tenants:
+        assert st.packets == st.served + st.dropped  # per-tenant conservation
+        total_served += st.served
+    assert total_served + sum(st.dropped for st in res.tenants) == n
+
+
+def test_stress_time_sliced_runs_are_bit_identical(census):
+    _, res_a = _sliced_run(census, max_queue=16, quantum=8)
+    _, res_b = _sliced_run(census, max_queue=16, quantum=8)
+    for t in range(NUM_TENANTS):
+        sa, sb = res_a.stats_for(t), res_b.stats_for(t)
+        assert (sa.packets, sa.served, sa.dropped, sa.deferred) == (
+            sb.packets, sb.served, sb.dropped, sb.deferred
+        ), f"tenant {t} accounting diverges across identical runs"
+        np.testing.assert_array_equal(
+            res_a.outputs_for(t), res_b.outputs_for(t)
+        )
+
+
+# -- SLO breach events at scale -----------------------------------------------
+
+def test_stress_slo_breach_events_deterministic(census):
+    _, specs, _, _ = census
+
+    def run():
+        sched = _admit_all(census, clock=FakeClock(step=0.125), quantum=64)
+        # Unreachable throughput floors on a spread of tenants: breaches
+        # must fire, and fire identically, on every run.
+        for t in (0, 17, 59, 118):
+            sched.set_slo(SloSpec(f"t{t}", min_pps=1e12))
+        sched.run(
+            mixed_tenant_stream(specs, 3000, chunk_size=750, seed=5),
+            mode="merged",
+            chunk_size=1024,
+        )
+        return sched
+
+    a, b = run(), run()
+    for t in (0, 17, 59, 118):
+        ev_a = a.slo_tracker(f"t{t}").events
+        assert [e.objective for e in ev_a] == ["throughput"]
+        assert ev_a == b.slo_tracker(f"t{t}").events
+    tel_a, tel_b = a.telemetry(), b.telemetry()
+    assert tel_a.breached_tenants == tel_b.breached_tenants
+    assert set(tel_a.breached_tenants) == {"t0", "t17", "t59", "t118"}

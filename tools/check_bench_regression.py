@@ -16,6 +16,9 @@ Tracked metrics (chosen to be meaningful at CI smoke budgets):
   derived ``pps_per_stream`` (higher is better) — aggregate rate divided by
   fleet size, so a regression that only shows up per-switch is visible even
   when the aggregate still clears the threshold;
+* likewise, rows carrying a ``tenants=`` count (the multi-tenant scheduler
+  sweep, including the ``dataplane_merged_interleaved`` headline) get a
+  derived ``pps_per_tenant`` (higher is better);
 * every ``roofline_frac`` value (higher is better), published flat as
   ``<row>_roofline_frac`` (e.g. ``dataplane_packed_roofline_frac``) —
   measured rate as a fraction of the analytic roofline packets/s bound
@@ -92,6 +95,18 @@ def collect_metrics(bench_dir: str) -> dict[str, dict]:
             ):
                 metrics[f"{row['name']}.pps_per_stream"] = {
                     "value": pps / streams,
+                    "higher_is_better": True,
+                }
+            tenants = row["metrics"].get("tenants")
+            if (
+                pps is not None
+                and tenants is not None
+                and math.isfinite(pps)
+                and pps > 0
+                and tenants > 0
+            ):
+                metrics[f"{row['name']}.pps_per_tenant"] = {
+                    "value": pps / tenants,
                     "higher_is_better": True,
                 }
             if row["name"] in LATENCY_ROWS and math.isfinite(
